@@ -1,0 +1,56 @@
+"""Paper Figs. 12/13: geo-distributed repair on the measured Aliyun ECS
+bandwidth matrix (Table III), 128 MB blocks.
+
+Fig. 12 (single failure, RS(4,2)/(4,3)/(6,3)/(6,4)): PPT longest at
+RS(4,2)/(6,3); BMF ~15.9% (avg) / 23.4% (max) under PPR, ~19.3% under PPT.
+Fig. 13 (two failures): MSRepair ~20.6% under m-PPR on average.
+"""
+from benchmarks.common import Row, aliyun_scenario, reduction, run_trials
+
+
+def run() -> list[Row]:
+    rows = []
+    bmf_vs_ppr, bmf_vs_ppt = [], []
+    for (n, k) in [(4, 2), (4, 3), (6, 3), (6, 4)]:
+        res = run_trials(
+            lambda seed: aliyun_scenario(n, k, (seed % n,), chunk_mb=128,
+                                         seed=seed),
+            ("ppr", "ppt", "bmf"))
+        t_p, _, _ = res["ppr"]
+        t_t, sd_t, _ = res["ppt"]
+        t_b, _, plan_b = res["bmf"]
+        bmf_vs_ppr.append(reduction(t_p, t_b))
+        bmf_vs_ppt.append(reduction(t_t, t_b))
+        rows.append(Row(
+            f"fig12/rs{n}{k}/128MB",
+            plan_b * 1e6,
+            f"ppr={t_p:.1f}s ppt={t_t:.1f}s bmf={t_b:.1f}s "
+            f"bmf_vs_ppr={-reduction(t_p, t_b):+.1f}% "
+            f"bmf_vs_ppt={-reduction(t_t, t_b):+.1f}%",
+        ))
+    rows.append(Row(
+        "fig12/summary", 0.0,
+        f"avg bmf_vs_ppr={-sum(bmf_vs_ppr)/len(bmf_vs_ppr):+.1f}% "
+        f"(paper avg -15.9%, max -23.4%); "
+        f"avg bmf_vs_ppt={-sum(bmf_vs_ppt)/len(bmf_vs_ppt):+.1f}% "
+        f"(paper avg -19.3%, max -22.4%)"))
+
+    gains = []
+    for (n, k) in [(6, 3), (6, 4)]:
+        res = run_trials(
+            lambda seed: aliyun_scenario(n, k, (seed % n, (seed + 1) % n),
+                                         chunk_mb=128, seed=seed),
+            ("mppr", "msrepair"))
+        t_m, _, _ = res["mppr"]
+        t_s, plan_s = res["msrepair"][0], res["msrepair"][2]
+        gains.append(reduction(t_m, t_s))
+        rows.append(Row(
+            f"fig13/rs{n}{k}/128MB",
+            plan_s * 1e6,
+            f"mppr={t_m:.1f}s msrepair={t_s:.1f}s "
+            f"ms_vs_mppr=-{reduction(t_m, t_s):.1f}%",
+        ))
+    rows.append(Row(
+        "fig13/summary", 0.0,
+        f"avg ms_vs_mppr=-{sum(gains)/len(gains):.1f}% (paper avg 20.6%)"))
+    return rows

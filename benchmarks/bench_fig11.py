@@ -1,0 +1,31 @@
+"""Paper Fig. 11: BMFRepair vs PPT under low (5 s) / high (2 s) bandwidth
+churn, RS(4,2), chunks 8/16/32 MB.
+
+Paper claims: comparable at 8/16 MB low-churn; BMF ~25% lower at 32 MB
+hot; PPT fluctuates much more (plan-once + multi-link sensitivity).
+"""
+import numpy as np
+
+from benchmarks.common import Row, mininet_scenario, reduction, run_trials
+
+SCHEMES = ("bmf", "ppt")
+
+
+def run() -> list[Row]:
+    rows = []
+    for label, interval in (("cold5s", 5.0), ("hot2s", 2.0)):
+        for chunk in (8, 16, 32):
+            res = run_trials(
+                lambda seed: mininet_scenario(4, 2, (0,), chunk_mb=chunk,
+                                              seed=seed, interval=interval),
+                SCHEMES)
+            t_b, sd_b, plan_b = res["bmf"]
+            t_p, sd_p, _ = res["ppt"]
+            rows.append(Row(
+                f"fig11/{label}/chunk{chunk}MB",
+                plan_b * 1e6,
+                f"bmf={t_b:.2f}s(std{sd_b:.2f}) ppt={t_p:.2f}s(std{sd_p:.2f}) "
+                f"bmf_vs_ppt=-{reduction(t_p, t_b):.1f}% "
+                f"ppt_fluct_ratio={sd_p / max(sd_b, 1e-9):.1f}x",
+            ))
+    return rows

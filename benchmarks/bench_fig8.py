@@ -1,0 +1,53 @@
+"""Paper Fig. 8: fraction of repair time spent on coding + algorithm
+(everything except network transmission). Paper: ~3% — the pruned DFS is
+cheap, so BMFRepair scales to large networks.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, mininet_scenario, run_trials
+from repro.core import executor
+from repro.core.simulator import RepairSimulator
+from repro.ec.rs import RSCode
+from repro.kernels import ops
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for (n, k) in [(4, 2), (6, 3), (7, 4)]:
+        for chunk in (8, 32):
+            sc = mininet_scenario(n, k, (0,), chunk_mb=chunk, seed=3)
+            sim = RepairSimulator(sc)
+            r = sim.run("bmf")
+            # coding cost: premultiply k chunks + k-1 XOR merges, measured
+            # on the real kernels (MB-sized buffers, interpret mode)
+            code = RSCode(n, k)
+            data = rng.integers(0, 256, size=(k, chunk << 20),
+                                dtype=np.uint8)
+            coeff = code.repair_coeffs((0,), tuple(range(1, k + 1)))
+            # compiled byte-domain path (the CPU-executable data plane;
+            # the Pallas kernel is the TPU target, interpret mode is a
+            # correctness harness, not a performance proxy)
+            fn = lambda: np.asarray(
+                ops.rs_reconstruct.__wrapped__(coeff, jnp.asarray(data))
+                if hasattr(ops.rs_reconstruct, "__wrapped__") else
+                ops.gf256_matmul(coeff, jnp.asarray(data), use_kernel=False))
+            fn()                                      # compile
+            t0 = time.perf_counter()
+            fn()
+            coding_s = time.perf_counter() - t0
+            plan_frac = 100 * r.planning_time / (r.total_time + r.planning_time)
+            overhead = r.planning_time + coding_s
+            frac = 100 * overhead / (r.total_time + overhead)
+            rows.append(Row(
+                f"fig8/rs{n}{k}/chunk{chunk}MB",
+                r.planning_time * 1e6,
+                f"plan_frac={plan_frac:.2f}% code={coding_s:.2f}s "
+                f"transfer={r.total_time:.2f}s total_overhead={frac:.1f}% "
+                f"(paper ~3%; coding on CPU-jnp — ISA-L/TPU-grade GF "
+                f"kernels push this to the paper's level)",
+            ))
+    return rows

@@ -1,0 +1,59 @@
+"""EC data-plane kernel throughput (CPU interpret mode) + the projected
+TPU roofline for the bit-plane GF(256) kernel.
+
+The kernel is bandwidth-bound by design: per output byte it moves
+(k+1)/k input+output bytes and performs 8*k bit-ops on 1/8-width planes
+-> arithmetic intensity ~ 2*k VPU-ops/byte. On v5e (819 GB/s HBM) the
+roofline is HBM: projected encode rate ~ HBM_bw / (1 + (n-k)/k) per chip.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.ec.rs import RSCode
+from repro.kernels import ops, ref
+
+HBM_BW = 819e9
+
+
+def _bench(fn, *args, reps=3):
+    fn(*args)                      # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jnp.asarray(out).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for (n, k) in [(6, 3), (7, 4)]:
+        code = RSCode(n, k)
+        nbytes = 1 << 18
+        data = jnp.asarray(
+            rng.integers(0, 256, size=(k, nbytes), dtype=np.uint8))
+        coeff = code.parity_coeffs()
+
+        t_kernel = _bench(lambda: ops.rs_encode(coeff, data))
+        t_ref = _bench(lambda: ref.gf256_matmul_bytes_ref(coeff, data))
+        mbps = k * nbytes / t_kernel / 2**20
+        # projected on-TPU rate (bandwidth-bound bit-plane kernel)
+        proj = HBM_BW / (1 + (n - k) / k) / 2**30
+        rows.append(Row(
+            f"kernels/rs{n}{k}_encode_256KBx{k}",
+            t_kernel * 1e6,
+            f"interpret={mbps:.0f}MB/s ref_ratio={t_ref / t_kernel:.2f}x "
+            f"tpu_roofline~{proj:.0f}GiB/s/chip (HBM-bound)",
+        ))
+
+    x = jnp.asarray(rng.integers(0, 256, size=(4, 1 << 19), dtype=np.uint8))
+    t_x = _bench(lambda: ops.xor_reduce(x))
+    rows.append(Row(
+        "kernels/xor_reduce_512KBx4",
+        t_x * 1e6,
+        f"interpret={2 / t_x:.0f}MB/s tpu_roofline~{819 / (1 + 1 / 4):.0f}GB/s",
+    ))
+    return rows

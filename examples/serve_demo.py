@@ -1,0 +1,31 @@
+"""Batched serving: prefill a prompt batch, decode greedily with KV caches
+across three model families (transformer / RWKV6 state / zamba2 hybrid).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import model as M
+from repro.serve.serve_step import generate
+
+
+def main():
+    for arch in ("qwen2_15b", "rwkv6_16b", "zamba2_7b"):
+        cfg = get_arch(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(key, cfg)
+        batch = {"tokens": jax.random.randint(key, (4, 24), 0,
+                                              cfg.vocab_size)}
+        t0 = time.time()
+        out = generate(params, cfg, batch, steps=16, chunk=16)
+        dt = time.time() - t0
+        print(f"{arch:12s} generated {out.shape[0]}x{out.shape[1]} tokens "
+              f"in {dt:5.1f}s — sample: {out[0, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

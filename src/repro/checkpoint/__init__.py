@@ -1,0 +1,8 @@
+"""Erasure-coded checkpointing: the paper's repair algorithms deployed as
+the fault-tolerance layer of the training framework."""
+
+from repro.checkpoint.ec_checkpoint import (  # noqa: F401
+    ECCheckpointConfig,
+    ECCheckpointer,
+    RepairReport,
+)

@@ -1,0 +1,11 @@
+"""Per-architecture configs (assigned pool) + shape registry."""
+
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    MoEConfig,
+    ShapeConfig,
+    applicable_shapes,
+    get_arch,
+)

@@ -1,0 +1,169 @@
+"""Dynamic bandwidth process + concurrent-ingress degradation model.
+
+Two empirical facts from the paper drive this module:
+
+* Rapid change (hot storage): link bandwidths are re-drawn at a fixed
+  interval — 5 s in the paper's "cold" simulation, 2 s in "hot" (Fig. 11).
+  `BandwidthProcess` is a seeded piecewise-constant process with O(1)
+  random access to any epoch (deterministic across runs and platforms).
+
+* Fan-in degradation (Fig. 2): when m links send to one node concurrently,
+  the *total* ingress throughput drops as m grows and the per-link split is
+  uneven. `IngressModel` reproduces both effects; it is what penalizes
+  star-repair and PPT's multi-sender assumption, exactly the paper's
+  criticism.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthProcess:
+    """Piecewise-constant per-link scaling of a base matrix.
+
+    In epoch e (t in [e*interval, (e+1)*interval)), each directed link's
+    bandwidth depends on `mode`:
+      * "jitter": base[i, j] * Uniform(1-jitter, 1+jitter) — load wobble
+        around a stable mean (the paper's cold-storage regime),
+      * "redraw": Uniform(min(base), max(base)) per link — memoryless
+        stress case; no scheme can predict anything across epochs.
+      * "markov": log-AR(1) around base — bw_e = base * exp(x_e),
+        x_e = rho * x_{e-1} + sigma * sqrt(1-rho^2) * N(0,1). The paper's
+        hot-storage regime: bandwidth "changes very sharply" yet links keep
+        short-term memory, so a plan-once snapshot (PPT) decays over a few
+        epochs while per-round monitoring (BMFRepair) stays current.
+    Draws come from a counter-based rng keyed on (seed, epoch), so
+    `matrix_at(t)` is pure and epoch-addressable without history.
+    `change_interval=None` (or jitter=0 in jitter mode) freezes the network.
+    """
+
+    base: np.ndarray
+    change_interval: float | None = None
+    jitter: float = 0.5
+    seed: int = 0
+    min_bw: float = 0.5
+    mode: str = "jitter"
+    rho: float = 0.6      # markov: per-epoch correlation
+    sigma: float = 0.5    # markov: stationary log-std
+    _AR_HORIZON = 32      # markov: truncation (rho^32 ~ 1e-7 at rho=0.6)
+
+    def epoch_of(self, t: float) -> int:
+        if self.change_interval is None:
+            return 0
+        return int(np.floor(t / self.change_interval))
+
+    def epoch_end(self, t: float) -> float:
+        if self.change_interval is None:
+            return np.inf
+        return (self.epoch_of(t) + 1) * self.change_interval
+
+    def matrix_at(self, t: float) -> np.ndarray:
+        if self.change_interval is None:
+            return self.base
+        if self.mode == "jitter" and self.jitter == 0.0:
+            return self.base
+        e = self.epoch_of(t)
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, e]))
+        if self.mode == "redraw":
+            off = ~np.eye(self.base.shape[0], dtype=bool)
+            lo = float(self.base[off].min())
+            hi = float(self.base[off].max())
+            m = rng.uniform(lo, hi, self.base.shape)
+        elif self.mode == "jitter":
+            scale = rng.uniform(1.0 - self.jitter, 1.0 + self.jitter, self.base.shape)
+            m = self.base * scale
+        elif self.mode == "markov":
+            # exact log-AR(1) via truncated innovation sum (epoch-addressable):
+            # x_e = sigma*sqrt(1-rho^2) * sum_{i} rho^(e-i) z_i,  z_i ~ N(0,1)
+            x = np.zeros_like(self.base)
+            start = max(0, e - self._AR_HORIZON)
+            for i in range(start, e + 1):
+                rng_i = np.random.default_rng(np.random.SeedSequence([self.seed, i]))
+                z = rng_i.standard_normal(self.base.shape)
+                x = x * self.rho + z if i > start else z
+            m = self.base * np.exp(self.sigma * np.sqrt(1 - self.rho**2) * x)
+        else:
+            raise ValueError(f"unknown bandwidth mode {self.mode!r}")
+        m = np.maximum(m, self.min_bw)
+        np.fill_diagonal(m, 0.0)
+        return m
+
+
+@dataclasses.dataclass(frozen=True)
+class IngressModel:
+    """Effective per-link rates when m senders target one receiver.
+
+    Total usable ingress = (best single in-link bw) * g(m) with
+    g(m) = max(floor, 1 - degrade*(m-1))  (Fig. 2: total trends *down*,
+    ~-8%/link in the measurement), split unevenly by Dirichlet(alpha)
+    weights (Fig. 2: shares are skewed). The split is *persistent* for the
+    whole concurrent episode (keyed on receiver and fan-in, not time):
+    Fig. 2 shows a slow flow staying slow, and the paper observes the
+    resulting "wide fluctuation" of multi-sender schemes. Each link is
+    additionally capped by its own standalone bandwidth; m=1 degenerates
+    to the standalone rate.
+    """
+
+    degrade: float = 0.10
+    floor: float = 0.40
+    alpha: float = 1.0
+    seed: int = 0
+    persistent_shares: bool = True
+
+    def total_factor(self, m: int) -> float:
+        return max(self.floor, 1.0 - self.degrade * (m - 1))
+
+    def effective_rates(
+        self,
+        link_bws: np.ndarray,
+        receiver: int,
+        epoch: int,
+    ) -> np.ndarray:
+        """link_bws: standalone rates of the m concurrent in-links."""
+        link_bws = np.asarray(link_bws, dtype=float)
+        m = link_bws.size
+        if m == 0:
+            return link_bws
+        if m == 1:
+            return link_bws.copy()
+        cap = float(link_bws.max()) * self.total_factor(m)
+        key = [self.seed, int(receiver), m]
+        if not self.persistent_shares:
+            key.append(int(epoch))
+        rng = np.random.default_rng(np.random.SeedSequence(key))
+        w = rng.dirichlet(np.full(m, self.alpha))
+        return np.minimum(link_bws, w * cap)
+
+    # fraction of a link's rate retained when the node simultaneously moves
+    # data in the other direction (pipelining rx+tx on one host; measured
+    # "single node accessing multiple links" effect on ~2-vCPU cloud VMs)
+    duplex: float = 0.65
+
+    def node_allocations(
+        self,
+        link_bws: np.ndarray,
+        directions: tuple[str, ...],
+        node: int,
+        epoch: int,
+    ) -> np.ndarray:
+        """Capacity split when one node drives m concurrent links.
+
+        Links of the *same* direction contend like receiver fan-in
+        (degraded total, persistent skewed split). If the node is active in
+        *both* directions at once (a pipelined relay receiving from a child
+        while sending to its parent — something BMF's store-and-forward
+        relays never do), every allocation is further scaled by `duplex`.
+        """
+        link_bws = np.asarray(link_bws, dtype=float)
+        out = np.zeros_like(link_bws)
+        dirs = np.asarray(directions)
+        for d in ("rx", "tx"):
+            sel = dirs == d
+            if sel.any():
+                out[sel] = self.effective_rates(link_bws[sel], node, epoch)
+        if (dirs == "rx").any() and (dirs == "tx").any():
+            out = out * self.duplex
+        return out

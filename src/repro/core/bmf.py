@@ -1,0 +1,139 @@
+"""BMFRepair (paper Algorithm 1) — bandwidth-aware multi-level forwarding.
+
+Given one round's transfers and the *current* bandwidth matrix (BMFRepair
+monitors bandwidth in real time and re-optimizes every round), repeatedly:
+
+  1. find the transfer whose path takes the longest (round time = max),
+  2. search the cheapest store-and-forward route src -> ... -> dst through
+     still-unused *idle* nodes (pruned DFS; path cost = sum of hop times,
+     per the paper's t21+t22 < t2 example; each idle node forwards once),
+  3. if the route beats the current path, commit it and repeat; stop when
+     the slowest transfer cannot be improved (paper's loop exit).
+
+`optimize_all=True` is a beyond-paper extension: after the bottleneck stops
+improving, also reroute non-bottleneck transfers (helps when bandwidth will
+shift mid-round; disabled for paper-faithful runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.plan import Round, Transfer
+
+
+def path_time(path: tuple[int, ...], bw: np.ndarray, chunk_mb: float) -> float:
+    """Store-and-forward: sum of hop times (paper Fig. 3/6 semantics)."""
+    total = 0.0
+    for u, v in zip(path[:-1], path[1:]):
+        b = bw[u, v]
+        if b <= 0:
+            return float("inf")
+        total += chunk_mb / b
+    return total
+
+
+def find_min_time_path(
+    src: int,
+    dst: int,
+    idle: list[int],
+    bw: np.ndarray,
+    chunk_mb: float,
+    bound: float,
+) -> tuple[tuple[int, ...], float]:
+    """Pruned DFS over idle-node subsets (paper Fig. 6 tree search).
+
+    Returns the best path and its time; (src, dst) direct if nothing beats
+    `bound`. Partial sums >= the best known time are pruned — the paper's
+    observation that this keeps the brute-force search ~3% of repair time.
+    """
+    best_path: tuple[int, ...] = (src, dst)
+    best_time = min(bound, path_time(best_path, bw, chunk_mb))
+
+    idle = [x for x in idle if x != src and x != dst]
+
+    def dfs(cur: int, used: set[int], cost: float, route: list[int]) -> None:
+        nonlocal best_path, best_time
+        # option 1: hop straight to dst
+        if bw[cur, dst] > 0:
+            t = cost + chunk_mb / bw[cur, dst]
+            if t < best_time:
+                best_time = t
+                best_path = tuple(route) + (dst,)
+        # option 2: extend through an unused idle node
+        for nxt in idle:
+            if nxt in used or bw[cur, nxt] <= 0:
+                continue
+            c = cost + chunk_mb / bw[cur, nxt]
+            if c >= best_time:  # prune (the paper's 4+5 > 5 example)
+                continue
+            used.add(nxt)
+            route.append(nxt)
+            dfs(nxt, used, c, route)
+            route.pop()
+            used.remove(nxt)
+
+    dfs(src, {src}, 0.0, [src])
+    return best_path, best_time
+
+
+@dataclasses.dataclass
+class BMFStats:
+    iterations: int = 0
+    improved_links: int = 0
+    time_saved: float = 0.0
+
+
+def optimize_round(
+    rnd: Round,
+    bw: np.ndarray,
+    idle_nodes: list[int],
+    chunk_mb: float,
+    *,
+    optimize_all: bool = False,
+    max_iters: int = 64,
+) -> tuple[Round, BMFStats]:
+    """Algorithm 1 (BMFRepair) applied to one round's links."""
+    transfers = [
+        Transfer(src=t.src, dst=t.dst, job=t.job, terms=t.terms, path=t.path)
+        for t in rnd.transfers
+    ]
+    if not transfers:
+        return Round(transfers=[]), BMFStats()
+    in_use = set()
+    for t in transfers:
+        in_use.update(t.path)
+    avail = [x for x in idle_nodes if x not in in_use]
+    stats = BMFStats()
+
+    def t_time(t: Transfer) -> float:
+        return path_time(t.path, bw, chunk_mb)
+
+    for _ in range(max_iters):
+        stats.iterations += 1
+        worst = max(transfers, key=t_time)
+        worst_time = t_time(worst)
+        path, new_time = find_min_time_path(
+            worst.src, worst.dst, avail, bw, chunk_mb, worst_time
+        )
+        if new_time >= worst_time or path == worst.path:
+            break  # the bottleneck link cannot be improved -> exit (Alg. 1)
+        worst.path = path
+        for relay in path[1:-1]:
+            avail.remove(relay)
+        stats.improved_links += 1
+        stats.time_saved += worst_time - new_time
+
+    if optimize_all:  # beyond-paper: also shorten non-bottleneck links
+        for t in sorted(transfers, key=t_time, reverse=True):
+            cur = t_time(t)
+            path, new_time = find_min_time_path(t.src, t.dst, avail, bw, chunk_mb, cur)
+            if new_time < cur and path != t.path:
+                t.path = path
+                for relay in path[1:-1]:
+                    avail.remove(relay)
+                stats.improved_links += 1
+                stats.time_saved += cur - new_time
+
+    return Round(transfers=transfers), stats

@@ -1,0 +1,74 @@
+"""JAX data-plane execution of repair plans, byte-verified.
+
+The simulator times a plan; this module *runs* it: every helper holds a
+real chunk, premultiplies its Galois coefficient with the Pallas
+`gf256_matmul` kernel, transfers move buffers between per-node stores, and
+merges XOR with the `xor_reduce` kernel. Relay nodes only buffer (the
+paper: forwarding nodes do not compute). At the end the requestor's buffer
+must equal the lost block bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import Job, RepairPlan
+from repro.ec.rs import RSCode
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    reconstructed: dict[int, np.ndarray]   # job_id -> bytes
+    verified: bool
+    bytes_moved: int
+
+
+def execute_plan(
+    plan: RepairPlan,
+    code: RSCode,
+    codeword: np.ndarray,                  # (n, nbytes) original stripe
+    *,
+    use_kernel: bool = True,
+) -> ExecutionResult:
+    nbytes = codeword.shape[1]
+    # per-(job, node) payload store
+    store: dict[tuple[int, int], jnp.ndarray] = {}
+    for job in plan.jobs:
+        coeffs = code.repair_coeffs(
+            tuple([job.failed_node]), tuple(job.helpers)
+        )[0]  # (k,) coefficients, aligned with job.helpers
+        for h, c in zip(job.helpers, coeffs):
+            block = jnp.asarray(codeword[h])
+            pre = ops.gf256_matmul(
+                np.array([[c]], dtype=np.uint8), block[None, :],
+                use_kernel=use_kernel,
+            )[0]
+            store[(job.job_id, h)] = pre
+
+    bytes_moved = 0
+    for rnd in plan.rounds:
+        arrivals: list[tuple[int, int, jnp.ndarray]] = []
+        for t in rnd.transfers:
+            payload = store.pop((t.job, t.src))
+            bytes_moved += nbytes * (len(t.path) - 1)   # relays re-send
+            arrivals.append((t.job, t.dst, payload))
+        for job_id, dst, payload in arrivals:
+            existing = store.get((job_id, dst))
+            if existing is None:
+                store[(job_id, dst)] = payload
+            else:
+                store[(job_id, dst)] = ops.xor_reduce(
+                    jnp.stack([existing, payload]), use_kernel=use_kernel
+                )
+
+    recon: dict[int, np.ndarray] = {}
+    ok = True
+    for job in plan.jobs:
+        got = np.asarray(store[(job.job_id, job.requestor)])
+        recon[job.job_id] = got
+        if not np.array_equal(got, codeword[job.failed_node]):
+            ok = False
+    return ExecutionResult(reconstructed=recon, verified=ok, bytes_moved=bytes_moved)

@@ -1,0 +1,182 @@
+"""MSRepair (paper Algorithm 2) + multi-node baselines (m-PPR, random).
+
+Multi-node repair with node sets (paper eqs. 1-3):
+  RP = failed/requestor nodes, R = intersection of all helper sets,
+  NR = union of helper sets minus R.
+Per round, transfers are chosen greedily scanning the priority classes
+  {R,R} > {R,NR} > {NR,RP} > {NR,NR} > {R,RP} > {NR,R}
+(sender-set, receiver-set), under one-role-per-node-per-round. A transfer
+is *useful* iff the receiver already holds a fragment of the same job (XOR
+merge) or is the job's requestor. Tie-break inside a class drains the most-
+loaded sender first (nodes holding fragments of several jobs are future
+bottlenecks), then lowest (job, src, dst) for determinism — this reproduces
+the paper's Table II 3-round schedule for RS(7,4), see tests.
+
+Helper selection follows the paper: maximize |NR| (spread helper sets as
+disjointly as the survivor count allows).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plan import FragmentState, Job, RepairPlan, Round, Transfer
+from repro.core.ppr import ppr_rounds
+
+
+# ----------------------------------------------------------- helper selection
+def select_helpers_multi(
+    n: int, k: int, failed: list[int], *, extra_busy: set[int] | None = None
+) -> list[tuple[int, ...]]:
+    """Pick k helpers per failed node, maximizing |NR| (minimal overlap)."""
+    survivors = [x for x in range(n) if x not in failed and x not in (extra_busy or set())]
+    if len(survivors) < k:
+        raise ValueError("not enough survivors to repair")
+    jobs = len(failed)
+    picks: list[list[int]] = [[] for _ in range(jobs)]
+    # Round-robin over survivors: consecutive jobs take distinct nodes first,
+    # so overlap only appears once survivors run out — this maximizes |NR|.
+    idx = 0
+    for _ in range(k):
+        for j in range(jobs):
+            # next survivor not already picked by this job
+            for step in range(len(survivors)):
+                cand = survivors[(idx + step) % len(survivors)]
+                if cand not in picks[j]:
+                    picks[j].append(cand)
+                    idx = (idx + step + 1) % len(survivors)
+                    break
+            else:
+                raise ValueError("helper selection failed")
+    return [tuple(sorted(p)) for p in picks]
+
+
+def node_sets(jobs: list[Job]) -> tuple[set[int], set[int], set[int]]:
+    """(R, NR, RP) per paper eqs. (1)-(3)."""
+    helper_sets = [set(j.helpers) for j in jobs]
+    r: set[int] = set.intersection(*helper_sets) if helper_sets else set()
+    nr: set[int] = set.union(*helper_sets) - r if helper_sets else set()
+    rp = {j.requestor for j in jobs}
+    return r, nr, rp
+
+
+# ------------------------------------------------------------------ MSRepair
+_PRIORITY = (("R", "R"), ("R", "NR"), ("NR", "RP"), ("NR", "NR"), ("R", "RP"), ("NR", "R"))
+
+
+def msrepair_rounds(jobs: list[Job], *, max_rounds: int = 64) -> list[Round]:
+    r_set, nr_set, rp_set = node_sets(jobs)
+
+    def set_of(node: int) -> str:
+        if node in rp_set:
+            return "RP"
+        if node in r_set:
+            return "R"
+        if node in nr_set:
+            return "NR"
+        return "IDLE"
+
+    state = FragmentState(jobs)
+    job_by_id = {j.job_id: j for j in jobs}
+    rounds: list[Round] = []
+    for _ in range(max_rounds):
+        if state.all_done():
+            break
+        busy: set[int] = set()
+        rnd = Round()
+
+        def candidates_in(cls: tuple[str, str]) -> list[tuple]:
+            cands = []
+            for job_id, holders in state.holdings.items():
+                if state.job_done(job_id):
+                    continue
+                req = job_by_id[job_id].requestor
+                for src, terms in holders.items():
+                    if src in busy or set_of(src) != cls[0] or src == req:
+                        continue
+                    for dst in list(holders.keys()) + [req]:
+                        if dst == src or dst in busy or set_of(dst) != cls[1]:
+                            continue
+                        # useful: merge at dst, or delivery to requestor
+                        if dst != req and dst not in holders:
+                            continue
+                        load = sum(
+                            1 for h in state.holdings.values() if src in h
+                        )
+                        cands.append((-load, job_id, src, dst, frozenset(terms)))
+            cands.sort()
+            return cands
+
+        for cls in _PRIORITY:
+            while True:
+                cands = candidates_in(cls)
+                if not cands:
+                    break
+                _, job_id, src, dst, terms = cands[0]
+                tr = Transfer(src=src, dst=dst, job=job_id, terms=terms)
+                state.apply(tr)
+                rnd.transfers.append(tr)
+                busy.update((src, dst))
+        if not rnd.transfers:
+            raise RuntimeError("MSRepair stalled — no feasible transfer")
+        rounds.append(rnd)
+    else:
+        raise RuntimeError("MSRepair exceeded max_rounds")
+    return rounds
+
+
+def plan_msrepair(jobs: list[Job]) -> RepairPlan:
+    return RepairPlan(jobs=jobs, rounds=msrepair_rounds(jobs), meta={"scheme": "msrepair"})
+
+
+# --------------------------------------------------------------------- m-PPR
+def plan_mppr(jobs: list[Job]) -> RepairPlan:
+    """m-PPR (Mitra et al.): reconstruction jobs effectively serialize —
+    each failed block runs its PPR schedule back-to-back (paper Fig. 5 /
+    Table II: 2x2=4 rounds for RS(6,3), 3+3=6 for RS(7,4))."""
+    rounds: list[Round] = []
+    for job in jobs:
+        rounds.extend(ppr_rounds(job))
+    return RepairPlan(jobs=jobs, rounds=rounds, meta={"scheme": "m-ppr"})
+
+
+# -------------------------------------------------------------------- random
+def plan_random(jobs: list[Job], *, seed: int = 0, max_rounds: int = 256) -> RepairPlan:
+    """Random scheduling baseline: each round greedily packs uniformly-random
+    useful transfers (ignoring the priority classes)."""
+    rng = np.random.default_rng(seed)
+    state = FragmentState(jobs)
+    job_by_id = {j.job_id: j for j in jobs}
+    rounds: list[Round] = []
+    for _ in range(max_rounds):
+        if state.all_done():
+            break
+        busy: set[int] = set()
+        rnd = Round()
+        while True:
+            cands = []
+            for job_id, holders in state.holdings.items():
+                if state.job_done(job_id):
+                    continue
+                req = job_by_id[job_id].requestor
+                for src, terms in holders.items():
+                    if src in busy or src == req:
+                        continue
+                    for dst in list(holders.keys()) + [req]:
+                        if dst == src or dst in busy:
+                            continue
+                        if dst != req and dst not in holders:
+                            continue
+                        cands.append((job_id, src, dst, frozenset(terms)))
+            if not cands:
+                break
+            job_id, src, dst, terms = cands[int(rng.integers(len(cands)))]
+            tr = Transfer(src=src, dst=dst, job=job_id, terms=terms)
+            state.apply(tr)
+            rnd.transfers.append(tr)
+            busy.update((src, dst))
+        if not rnd.transfers:
+            raise RuntimeError("random scheduler stalled")
+        rounds.append(rnd)
+    else:
+        raise RuntimeError("random scheduler exceeded max_rounds")
+    return RepairPlan(jobs=jobs, rounds=rounds, meta={"scheme": "random"})

@@ -1,0 +1,90 @@
+"""PPT — Parallel Pipeline Tree (Bai et al., ICPP'19) baseline.
+
+PPT builds, *once, from the bandwidth snapshot at repair start*, a tree
+rooted at the requestor spanning the k helpers; chunk slices are pipelined
+down the tree, so steady-state repair rate = the tree's bottleneck edge
+rate. PPT assumes a receiver's capacity divides *equally* among its
+concurrent in-links (the assumption our paper criticizes via Fig. 2): the
+tree is chosen to maximize the bottleneck under that assumption, but it is
+*executed* under the simulator's real ingress model and bandwidth churn —
+plan-once is exactly why PPT degrades in rapidly-changing networks
+(paper Fig. 11/12).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.plan import Job
+
+
+@dataclasses.dataclass
+class PPTTree:
+    job: Job
+    parent: dict[int, int]                 # helper/relay -> parent node
+    children: dict[int, list[int]]
+
+    @property
+    def edges(self) -> list[tuple[int, int]]:
+        return [(c, p) for c, p in self.parent.items()]
+
+    def assumed_bottleneck(self, bw: np.ndarray) -> float:
+        bn = float("inf")
+        for c, p in self.parent.items():
+            fan_in = max(1, len(self.children.get(p, ())))
+            bn = min(bn, bw[c, p] / fan_in)
+        return bn
+
+
+def build_ppt_tree(job: Job, bw0: np.ndarray) -> PPTTree:
+    """Greedy max-bottleneck attachment under PPT's equal-split assumption.
+
+    PPT's model (quoted in the paper): "when multiple nodes send data to a
+    node in parallel, the bandwidth of each link is the total bandwidth
+    divided by the number of links" — i.e. the receiver's capacity (its
+    best in-link) divides *equally* among concurrent in-links, regardless
+    of each link's own rate. Under this belief fan-in looks cheap whenever
+    helper-to-helper links are weak, so PPT happily builds multi-sender
+    nodes — which the *real* ingress behaviour (Fig. 2: degraded total,
+    skewed split) then punishes. That modeling gap is the paper's critique.
+    """
+    root = job.requestor
+    parent: dict[int, int] = {}
+    children: dict[int, list[int]] = {root: []}
+    attached = {root}
+    remaining = list(job.helpers)
+    capacity = bw0.max(axis=0)  # believed receiver capacity: best in-link
+
+    def edge_rate(child: int, par: int, extra_child: bool) -> float:
+        fan_in = len(children.get(par, ())) + (1 if extra_child else 0)
+        if fan_in <= 1:
+            return bw0[child, par]
+        return capacity[par] / fan_in
+
+    def bottleneck_to_root(node: int) -> float:
+        bn = float("inf")
+        cur = node
+        while cur != root:
+            p = parent[cur]
+            bn = min(bn, edge_rate(cur, p, extra_child=False))
+            cur = p
+        return bn
+
+    while remaining:
+        best = None  # (rate, helper, attach_point)
+        for h in remaining:
+            for v in attached:
+                rate = min(
+                    edge_rate(h, v, extra_child=True),
+                    bottleneck_to_root(v) if v != root else float("inf"),
+                )
+                if best is None or rate > best[0]:
+                    best = (rate, h, v)
+        _, h, v = best
+        parent[h] = v
+        children.setdefault(v, []).append(h)
+        children.setdefault(h, [])
+        attached.add(h)
+        remaining.remove(h)
+    return PPTTree(job=job, parent=parent, children=children)

@@ -1,0 +1,3 @@
+"""Erasure-coding substrate: GF(256) arithmetic, RS codes, bit-plane layout."""
+
+from repro.ec import bitplane, gf256, rs, stripe  # noqa: F401

@@ -1,0 +1,105 @@
+"""Bit-plane (bit-sliced) layout for TPU-native GF(256) arithmetic.
+
+A GF(256) multiply by a constant c is linear over GF(2): viewing a byte as a
+bit-vector, out = M_c @ in with M_c an 8x8 bit matrix (`gf256.mul_bitmatrix`).
+If we slice a chunk of B bytes into 8 planes -- plane b holds bit b of every
+byte, packed 32 bits per uint32 lane -- then multiply-accumulate over shards
+becomes pure AND/XOR on uint32 vectors: no gathers, no byte shuffles, ideal
+for the TPU VPU (see DESIGN.md section 3/4).
+
+Packing convention: plane word w covers bytes [32w, 32w+32); byte 32w+j
+contributes bit j of the word (little bit order). Chunks are padded to a
+multiple of 32 bytes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ec import gf256
+
+BYTES_PER_WORD = 4
+BYTES_PER_LANE = 32  # bits per uint32 word
+
+
+def padded_len(nbytes: int) -> int:
+    return (nbytes + BYTES_PER_LANE - 1) // BYTES_PER_LANE * BYTES_PER_LANE
+
+
+# --------------------------------------------------------------------- numpy
+def pack_np(data: np.ndarray) -> np.ndarray:
+    """(..., nbytes) uint8 -> (..., 8, W) uint32 bit-planes; W = nbytes/32."""
+    data = np.asarray(data, dtype=np.uint8)
+    nbytes = data.shape[-1]
+    pad = padded_len(nbytes) - nbytes
+    if pad:
+        data = np.concatenate(
+            [data, np.zeros(data.shape[:-1] + (pad,), dtype=np.uint8)], axis=-1
+        )
+    w = data.shape[-1] // BYTES_PER_LANE
+    grouped = data.reshape(data.shape[:-1] + (w, BYTES_PER_LANE)).astype(np.uint32)
+    shifts = np.arange(BYTES_PER_LANE, dtype=np.uint32)
+    planes = []
+    for b in range(8):
+        bits = (grouped >> b) & 1
+        planes.append((bits << shifts).sum(axis=-1, dtype=np.uint32))
+    return np.stack(planes, axis=-2)  # (..., 8, W)
+
+
+def unpack_np(planes: np.ndarray, nbytes: int) -> np.ndarray:
+    """(..., 8, W) uint32 -> (..., nbytes) uint8."""
+    planes = np.asarray(planes, dtype=np.uint32)
+    w = planes.shape[-1]
+    shifts = np.arange(BYTES_PER_LANE, dtype=np.uint32)
+    out = np.zeros(planes.shape[:-2] + (w, BYTES_PER_LANE), dtype=np.uint8)
+    for b in range(8):
+        bits = (planes[..., b, :, None] >> shifts) & 1
+        out |= (bits << b).astype(np.uint8)
+    return out.reshape(planes.shape[:-2] + (w * BYTES_PER_LANE,))[..., :nbytes]
+
+
+# ----------------------------------------------------------------------- jnp
+def pack_jnp(data: jnp.ndarray) -> jnp.ndarray:
+    """jnp mirror of pack_np (on-device bit-slicing)."""
+    nbytes = data.shape[-1]
+    pad = padded_len(nbytes) - nbytes
+    if pad:
+        data = jnp.concatenate(
+            [data, jnp.zeros(data.shape[:-1] + (pad,), dtype=jnp.uint8)], axis=-1
+        )
+    w = data.shape[-1] // BYTES_PER_LANE
+    grouped = data.reshape(data.shape[:-1] + (w, BYTES_PER_LANE)).astype(jnp.uint32)
+    shifts = jnp.arange(BYTES_PER_LANE, dtype=jnp.uint32)
+    planes = [
+        jnp.sum(((grouped >> b) & jnp.uint32(1)) << shifts, axis=-1, dtype=jnp.uint32)
+        for b in range(8)
+    ]
+    return jnp.stack(planes, axis=-2)
+
+
+def unpack_jnp(planes: jnp.ndarray, nbytes: int) -> jnp.ndarray:
+    w = planes.shape[-1]
+    shifts = jnp.arange(BYTES_PER_LANE, dtype=jnp.uint32)
+    acc = jnp.zeros(planes.shape[:-2] + (w, BYTES_PER_LANE), dtype=jnp.uint8)
+    for b in range(8):
+        bits = ((planes[..., b, :, None] >> shifts) & 1).astype(jnp.uint8)
+        acc = acc | (bits << b)
+    return acc.reshape(planes.shape[:-2] + (w * BYTES_PER_LANE,))[..., :nbytes]
+
+
+# ------------------------------------------------------------------ bitmatrix
+def coeff_to_masks_np(coeff: np.ndarray) -> np.ndarray:
+    """(m, k) GF(256) coefficients -> (m, k, 8, 8) uint32 AND-masks.
+
+    masks[o, i, bi, bj] = 0xFFFFFFFF if bit (bi, bj) of the multiply-by-
+    coeff[o, i] bit-matrix is set else 0. Kernel computes
+    out_plane[o, bi] ^= data_plane[i, bj] & masks[o, i, bi, bj].
+    """
+    coeff = np.asarray(coeff, dtype=np.uint8)
+    m, k = coeff.shape
+    masks = np.zeros((m, k, 8, 8), dtype=np.uint32)
+    for o in range(m):
+        for i in range(k):
+            bm = gf256.mul_bitmatrix(int(coeff[o, i]))  # (8, 8) 0/1
+            masks[o, i] = bm.astype(np.uint32) * np.uint32(0xFFFFFFFF)
+    return masks

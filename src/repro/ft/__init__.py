@@ -1,0 +1,4 @@
+"""Fault tolerance: failure injection, straggler detection, elastic re-mesh."""
+
+from repro.ft.failures import FailureInjector, StragglerMonitor  # noqa: F401
+from repro.ft.elastic import elastic_data_size, shrink_mesh  # noqa: F401

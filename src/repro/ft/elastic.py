@@ -1,0 +1,50 @@
+"""Elastic re-meshing after host/pod loss.
+
+Policy: the tensor axis is sacred (intra-pod ICI); capacity loss shrinks
+the data axis (drop whole data-rows of the mesh) or drops a pod. Training
+resumes from the latest EC checkpoint with the global batch either kept
+(more grad accumulation) or scaled down proportionally.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def shrink_mesh(mesh: Mesh, lost_data_rows: int) -> Mesh:
+    """Drop `lost_data_rows` rows of the data axis, keep other axes."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if "data" not in axes:
+        raise ValueError("mesh has no data axis")
+    new_data = axes["data"] - lost_data_rows
+    if new_data < 1:
+        raise ValueError("cannot shrink data axis below 1")
+    data_dim = mesh.axis_names.index("data")
+    idx = [slice(None)] * mesh.devices.ndim
+    idx[data_dim] = slice(0, new_data)
+    return Mesh(mesh.devices[tuple(idx)], mesh.axis_names)
+
+
+def drop_pod(mesh: Mesh, pod: int) -> Mesh:
+    axes = list(mesh.axis_names)
+    if "pod" not in axes:
+        raise ValueError("mesh has no pod axis")
+    pod_dim = axes.index("pod")
+    devices = np.delete(mesh.devices, pod, axis=pod_dim)
+    if devices.shape[pod_dim] == 0:
+        raise ValueError("cannot drop the last pod")
+    return Mesh(devices, mesh.axis_names)
+
+
+def elastic_data_size(global_batch: int, old_hosts: int,
+                      new_hosts: int) -> int:
+    """Keep per-host batch constant; shrink global batch proportionally
+    (rounded to a multiple of new_hosts)."""
+    per = global_batch // old_hosts
+    return max(per * new_hosts, new_hosts)
+
+
+def reshard_state(state, mesh: Mesh, shardings):
+    """Re-place a (host-local) state pytree onto a new mesh."""
+    return jax.device_put(state, shardings) if shardings is not None else state

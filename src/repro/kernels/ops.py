@@ -1,0 +1,80 @@
+"""Public jit'd entry points for the EC data plane.
+
+Dispatches to the Pallas kernels (compiled on TPU, interpret=True elsewhere —
+this container is CPU-only so interpret mode exercises the kernel bodies).
+Byte-level convenience wrappers handle bit-slicing at the boundary.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ec import bitplane
+from repro.kernels import ref
+from repro.kernels.gf256_matmul import gf256_matmul_planes
+from repro.kernels.xor_reduce import xor_reduce_words
+
+
+@functools.lru_cache(maxsize=1)
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gf256_matmul(
+    coeff: np.ndarray,
+    data: jax.Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(m, k) uint8 GF coefficients x (k, nbytes) uint8 -> (m, nbytes) uint8.
+
+    The workhorse of RS encode / decode / repair-term premultiplication.
+    `coeff` must be concrete (it parametrizes the bit-matrix masks).
+    """
+    coeff = np.asarray(coeff, dtype=np.uint8)
+    if not use_kernel:
+        return ref.gf256_matmul_bytes_ref(coeff, data)
+    interpret = _interpret_default() if interpret is None else interpret
+    nbytes = data.shape[-1]
+    masks = jnp.asarray(bitplane.coeff_to_masks_np(coeff))
+    planes = bitplane.pack_jnp(data)
+    out_planes = gf256_matmul_planes(masks, planes, interpret=interpret)
+    return bitplane.unpack_jnp(out_planes, nbytes)
+
+
+def xor_reduce(
+    chunks: jax.Array, *, use_kernel: bool = True, interpret: bool | None = None
+) -> jax.Array:
+    """(k, nbytes) uint8 -> (nbytes,) uint8 XOR of all chunks."""
+    if chunks.shape[0] == 1:
+        return chunks[0]
+    if not use_kernel:
+        out = chunks[0]
+        for i in range(1, chunks.shape[0]):
+            out = out ^ chunks[i]
+        return out
+    interpret = _interpret_default() if interpret is None else interpret
+    nbytes = chunks.shape[-1]
+    pad = -nbytes % 4
+    if pad:
+        chunks = jnp.pad(chunks, ((0, 0), (0, pad)))
+    words = jax.lax.bitcast_convert_type(
+        chunks.reshape(chunks.shape[0], -1, 4), jnp.uint32
+    ).reshape(chunks.shape[0], -1)
+    out = xor_reduce_words(words, interpret=interpret)
+    out_bytes = jax.lax.bitcast_convert_type(out[:, None], jnp.uint8).reshape(-1)
+    return out_bytes[:nbytes]
+
+
+def rs_encode(parity_coeff: np.ndarray, data_blocks: jax.Array) -> jax.Array:
+    """(n-k, k) coeffs x (k, nbytes) data -> (n-k, nbytes) parity."""
+    return gf256_matmul(parity_coeff, data_blocks)
+
+
+def rs_reconstruct(repair_coeff: np.ndarray, helper_blocks: jax.Array) -> jax.Array:
+    """(f, k) repair coeffs x (k, nbytes) helpers -> (f, nbytes) lost blocks."""
+    return gf256_matmul(repair_coeff, helper_blocks)

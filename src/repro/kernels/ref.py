@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two *independent* formulations:
+  * byte domain — log/exp (dense MUL_TABLE) Galois multiply + XOR accumulate,
+  * plane domain — the same bit-matrix math as the kernel but in plain jnp.
+Tests cross-check kernel vs both, and both vs the numpy peasant-multiply
+ground truth in repro/ec/gf256.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ec import bitplane, gf256
+
+
+def gf256_matmul_bytes_ref(coeff: np.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """(m,k) static uint8 coeffs x (k, nbytes) uint8 -> (m, nbytes) uint8.
+
+    Byte-domain oracle: per-coefficient 256-entry table lookup (jnp.take)
+    XOR-accumulated. Coefficients must be concrete (numpy) — they select
+    which table row to use.
+    """
+    coeff = np.asarray(coeff, dtype=np.uint8)
+    m, k = coeff.shape
+    assert data.shape[0] == k
+    outs = []
+    for o in range(m):
+        acc = jnp.zeros(data.shape[1:], dtype=jnp.uint8)
+        for i in range(k):
+            c = int(coeff[o, i])
+            if c == 0:
+                continue
+            if c == 1:
+                acc = acc ^ data[i]
+            else:
+                row = jnp.asarray(gf256.MUL_TABLE[c])  # (256,)
+                acc = acc ^ jnp.take(row, data[i].astype(jnp.int32))
+        outs.append(acc)
+    return jnp.stack(outs)
+
+
+def gf256_matmul_planes_ref(masks: jnp.ndarray, planes: jnp.ndarray) -> jnp.ndarray:
+    """Plane-domain oracle, vectorized einsum-of-XOR formulation."""
+    # out[o, bi, w] = XOR_{i, bj} planes[i, bj, w] & masks[o, i, bi, bj]
+    m = masks.shape[0]
+    k = planes.shape[0]
+    outs = []
+    for o in range(m):
+        acc = jnp.zeros((8, planes.shape[-1]), dtype=jnp.uint32)
+        for i in range(k):
+            for bj in range(8):
+                acc = acc ^ (planes[i, bj][None, :] & masks[o, i, :, bj][:, None])
+        outs.append(acc)
+    return jnp.stack(outs)
+
+
+def xor_reduce_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """(k, W) uint32 -> (W,) uint32."""
+    out = words[0]
+    for i in range(1, words.shape[0]):
+        out = out ^ words[i]
+    return out
+
+
+def gf256_matmul_np(coeff: np.ndarray, data: np.ndarray) -> np.ndarray:
+    """Numpy ground truth (table-based; see gf256.gf_matmul_np)."""
+    return gf256.gf_matmul_np(coeff, data)
+
+
+def bitplane_roundtrip_np(data: np.ndarray) -> np.ndarray:
+    return bitplane.unpack_np(bitplane.pack_np(data), data.shape[-1])

@@ -1,0 +1,64 @@
+"""Per-(arch x shape) execution plans: microbatching, chunk sizes, remat.
+
+These keep every dry-run cell inside a v5e chip's 16 GiB HBM (verified by
+compiled.memory_analysis()); they do not change step semantics or total
+FLOPs, only scheduling.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig
+
+# microbatches for train_4k (global_batch=256)
+TRAIN_MICROBATCHES = {
+    "grok1_314b": 8,
+    "moonlight_16b_a3b": 4,
+    "zamba2_7b": 8,
+    "gemma3_4b": 4,
+    "gemma_2b": 2,
+    "qwen2_15b": 2,
+    "qwen2vl_2b": 2,
+    "whisper_medium": 2,
+    "rwkv6_16b": 2,
+    "smollm_360m": 4,
+}
+
+DECODE_CHUNK = {"decode_32k": 4096, "long_500k": 8192}
+
+
+# int8 KV cache: halves the bf16 caches that overflow a single pod
+# (grok-1 1.1 TB, moonlight 3.3 TB global at decode_32k). Window-sliced
+# archs (gemma3) keep bf16 (their cache win comes from slicing).
+INT8_KV = {"grok1_314b", "moonlight_16b_a3b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    train: TrainConfig | None = None
+    attn_chunk: int = 1024
+    decode_chunk: int = 4096
+    kv_dtype: str = "bf16"
+
+
+def plan_for(cfg: ArchConfig, shape: ShapeConfig) -> CellPlan:
+    if shape.kind == "train":
+        tcfg = TrainConfig(
+            adamw=AdamWConfig(),
+            microbatches=TRAIN_MICROBATCHES.get(cfg.name, 2),
+            remat=True,
+            attn_chunk=1024,
+            # grok-314B: f32 m/v alone is 2.5 TB; bf16 halves optimizer
+            # HBM so the single-pod (256 x 16 GiB) mesh fits
+            opt_dtype="bfloat16" if cfg.name == "grok1_314b" else "float32",
+        )
+        return CellPlan(train=tcfg)
+    if shape.kind == "prefill":
+        return CellPlan(attn_chunk=1024)
+    return CellPlan(
+        decode_chunk=DECODE_CHUNK.get(shape.name, 4096),
+        kv_dtype="int8" if (cfg.name in INT8_KV
+                            and shape.name == "decode_32k") else "bf16",
+    )

@@ -1,0 +1,360 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). 512 host devices back the 2x16x16 production mesh.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import SHAPES, ARCH_IDS, applicable_shapes, get_arch  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.cells import plan_for  # noqa: E402
+from repro.launch.mesh import make_production_mesh, rules_for  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models import whisper as W  # noqa: E402
+from repro.models.sharding import tree_shardings  # noqa: E402
+from repro.serve import serve_step as S  # noqa: E402
+from repro.train import train_step as T  # noqa: E402
+
+# v5e hardware constants for the roofline (see EXPERIMENTS.md section Roofline)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (handles tuples by summing elements)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (per-device,
+    post-SPMD-partitioning) HLO. Returns per-device byte counts by kind.
+
+    `-start` variants (async collectives) are counted; their `-done` halves
+    carry no new payload and are skipped.
+    """
+    sizes: dict[str, int] = {}
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    coll_re = re.compile(
+        r"\b(" + "|".join(_COLLECTIVES) + r")(-start)?\(([^)]*)\)")
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type prefix: "f32[1,2]{1,0} op(...)" or "(f32[..], ...) op(...)"
+        if rhs.startswith("("):
+            end = rhs.find(") ")
+            type_part = rhs[: end + 1] if end >= 0 else rhs
+        else:
+            type_part = rhs.split(" ", 1)[0]
+        sizes[name.lstrip("%")] = _type_bytes(type_part)
+        mm = coll_re.search(rhs)
+        if mm and "-done" not in rhs.split("(")[0]:
+            kind = mm.group(1)
+            ops = [o.strip().lstrip("%")
+                   for o in mm.group(3).split(",") if o.strip()]
+            nbytes = sum(sizes.get(o, 0) for o in ops)
+            out[kind] += nbytes
+            counts[kind] += 1
+    return {"bytes_per_device": out, "counts": counts,
+            "total_bytes_per_device": sum(out.values())}
+
+
+def count_params(struct_tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(struct_tree))
+
+
+def active_params(cfg, params_struct) -> int:
+    total = count_params(params_struct)
+    if cfg.moe is None:
+        return total
+    # expert weights activate top_k / num_experts
+    expert = 0
+    flat = jax.tree.flatten_with_path(params_struct)[0]
+    for path, leaf in flat:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "moe" in keys and any(k in ("wi_gate", "wi_up", "wo") for k in keys):
+            expert += int(np.prod(leaf.shape))
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return total - expert + int(expert * frac)
+
+
+def model_flops(cfg, shape, n_active: int) -> float:
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.is_encoder_decoder:
+            t = t + min(cfg.max_decoder_len, t)
+        return 6.0 * n_active * b * t
+    if shape.kind == "prefill":
+        return 2.0 * n_active * b * t
+    return 2.0 * n_active * b            # decode: one token per sequence
+
+
+# --------------------------------------------------------------- cell build
+def build_lowered(arch_id: str, shape_name: str, mesh_kind: str):
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = rules_for(mesh)
+    plan = plan_for(cfg, shape)
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        tcfg = plan.train
+        state_struct = jax.eval_shape(lambda: T.init_state(key, cfg, tcfg))
+        state_sh = tree_shardings(
+            rules, state_struct, T.state_logical(cfg, tcfg, rules))
+        batch_struct = M.input_specs(cfg, shape)
+        batch_sh = tree_shardings(
+            rules, batch_struct, M.batch_logical(cfg, shape))
+        step = T.make_train_step(cfg, tcfg, rules)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state_struct, batch_struct)
+        return lowered, cfg, shape, state_struct["params"]
+
+    params_struct = jax.eval_shape(lambda: M.init_params(key, cfg))
+    params_sh = tree_shardings(
+        rules, params_struct,
+        M.logical_params(cfg, rules, decode=(shape.kind == "decode")))
+
+    if shape.kind == "prefill":
+        batch_struct = M.input_specs(cfg, shape)
+        batch_sh = tree_shardings(
+            rules, batch_struct, M.batch_logical(cfg, shape))
+        prefill = S.make_prefill(cfg, rules, chunk=plan.attn_chunk,
+                                 max_len=shape.seq_len)
+        jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+        with mesh:
+            lowered = jitted.lower(params_struct, batch_struct)
+        return lowered, cfg, shape, params_struct
+
+    # decode
+    b, s = shape.global_batch, shape.seq_len
+    batch_struct = M.input_specs(cfg, shape)
+    batch_sh = tree_shardings(
+        rules, batch_struct, M.batch_logical(cfg, shape))
+    if cfg.is_encoder_decoder:
+        kv, hd = cfg.num_kv_heads, cfg.hd
+        cache_struct = {
+            "self": jax.eval_shape(
+                lambda: W.init_self_cache(cfg, b, cfg.max_decoder_len, rules)),
+            "xk": jax.ShapeDtypeStruct(
+                (cfg.num_layers, b, s, kv, hd), jnp.bfloat16),
+            "xv": jax.ShapeDtypeStruct(
+                (cfg.num_layers, b, s, kv, hd), jnp.bfloat16),
+        }
+        cache_logical = {
+            "self": {"k": (None, "batch", None, "tp", None),
+                     "v": (None, "batch", None, "tp", None),
+                     "pos": ("batch", None), "idx": ()},
+            "xk": (None, "batch", None, "tp", None),
+            "xv": (None, "batch", None, "tp", None),
+        }
+        step_fn = S.make_whisper_decode_step(cfg, rules, plan.decode_chunk)
+
+        def decode(params, token, cache):
+            return step_fn(params, token, cache)
+    else:
+        cache_struct = jax.eval_shape(
+            lambda: M.init_cache(cfg, b, s, rules, kv_dtype=plan.kv_dtype))
+        cache_logical = M.cache_logical(cfg, rules, kv_dtype=plan.kv_dtype)
+        step_fn = S.make_decode_step(cfg, rules, plan.decode_chunk)
+
+        def decode(params, token, cache, pos3=None):
+            return step_fn(params, token, cache, pos3)
+
+    cache_sh = tree_shardings(rules, cache_struct, cache_logical)
+    args = [params_struct, batch_struct["token"], cache_struct]
+    in_sh = [params_sh, batch_sh["token"], cache_sh]
+    if cfg.mrope:
+        args.append(batch_struct["pos3"])
+        in_sh.append(batch_sh["pos3"])
+    # serving loops donate the cache: the updated cache aliases the input
+    # buffers instead of doubling the footprint
+    jitted = jax.jit(decode, in_shardings=tuple(in_sh), donate_argnums=(2,))
+    with mesh:
+        lowered = jitted.lower(*args)
+    return lowered, cfg, shape, params_struct
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             out_dir: str, *, skip_existing: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_kind}.json")
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+    t0 = time.time()
+    lowered, cfg, shape, params_struct = build_lowered(
+        arch_id, shape_name, mesh_kind)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    t0 = time.time()
+    analysis = hlo_analysis.analyze(hlo)
+    t_analyze = time.time() - t0
+
+    chips = 512 if mesh_kind == "multi" else 256
+    n_total = count_params(params_struct)
+    n_active = active_params(cfg, params_struct)
+    # XLA's cost_analysis counts while bodies ONCE (scan-underreporting);
+    # hlo_analysis re-walks the module with trip-count multiplication.
+    flops_pd = float(analysis["flops_per_device"])
+    bytes_pd = float(analysis["bytes_per_device"])
+    coll_pd = float(analysis["collective_bytes_per_device"])
+
+    compute_s = flops_pd / PEAK_FLOPS
+    memory_s = bytes_pd / HBM_BW
+    collective_s = coll_pd / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mflops = model_flops(cfg, shape, n_active)
+
+    record = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "chips": chips,
+        "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "cost_analysis_xla_raw": {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")},
+        "hlo_analysis": {
+            "flops_per_device": flops_pd,
+            "bytes_per_device": bytes_pd,
+            "collective_bytes_per_device": coll_pd,
+            "collective_by_kind": analysis["collective_by_kind"],
+            "collective_counts": analysis["collective_counts"],
+            "analyze_s": round(t_analyze, 1),
+        },
+        "params_total": n_total,
+        "params_active": n_active,
+        "model_flops_global": mflops,
+        "hlo_flops_global": flops_pd * chips,
+        "useful_compute_ratio": (mflops / (flops_pd * chips)
+                                 if flops_pd else None),
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+        },
+    }
+    # per-device HBM residency (arguments+temp) — the fits-in-16GiB check
+    ma = record["memory_analysis"]
+    if ma:
+        record["per_device_bytes"] = (
+            ma.get("argument_size_in_bytes", 0) + ma.get("temp_size_in_bytes", 0))
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[dryrun] {arch_id} x {shape_name} x {mesh_kind}: OK "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+          f"dominant={dominant}, per-dev "
+          f"{record.get('per_device_bytes', 0)/2**30:.2f} GiB)")
+    print("  memory_analysis:", record["memory_analysis"])
+    print("  cost_analysis(flops)=%.3e bytes=%.3e coll=%.3e"
+          % (flops_pd, bytes_pd, coll_pd))
+    return record
+
+
+def all_cells() -> list[tuple[str, str, str]]:
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_arch(arch)
+        for shape in applicable_shapes(cfg):
+            for mesh in ("single", "multi"):
+                cells.append((arch, shape, mesh))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for c in all_cells():
+            print(*c)
+        return
+    if args.all:
+        failures = []
+        for arch, shape, mesh in all_cells():
+            out_path = os.path.join(
+                args.out, f"{arch}__{shape}__{mesh}.json")
+            if os.path.exists(out_path) and not args.force:
+                print(f"[dryrun] skip cached {arch} x {shape} x {mesh}")
+                continue
+            # fresh subprocess per cell: clean device state, bounded memory
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", arch, "--shape", shape, "--mesh", mesh,
+                 "--out", args.out],
+                env={**os.environ, "PYTHONPATH": "src"},
+            )
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh))
+        if failures:
+            print("FAILED cells:", failures)
+            sys.exit(1)
+        print("all cells OK")
+        return
+    run_cell(args.arch, args.shape, args.mesh, args.out,
+             skip_existing=not args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Summarize dry-run results into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.summarize results/dryrun [--md]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def load(dirname):
+    rows = [json.load(open(f)) for f in sorted(glob.glob(f"{dirname}/*.json"))]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    return rows
+
+
+def dryrun_table(rows):
+    print("| arch | shape | mesh | chips | fits (GiB/chip) | HLO GFLOPs/dev | "
+          "HBM GB/dev | coll GB/dev (top kind) | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        h = r["hlo_analysis"]
+        coll = h["collective_by_kind"]
+        top = max(coll, key=coll.get) if coll else "-"
+        gib = r.get("per_device_bytes", 0) / 2**30
+        outs = r["memory_analysis"].get("output_size_in_bytes", 0) / 2**30
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} "
+              f"| {gib:.1f}(+{outs:.1f} out) "
+              f"| {h['flops_per_device'] / 1e9:.1f} "
+              f"| {h['bytes_per_device'] / 1e9:.1f} "
+              f"| {h['collective_bytes_per_device'] / 1e9:.2f} ({top}) "
+              f"| {r['compile_s']:.0f} |")
+
+
+def roofline_table(rows, mesh="single"):
+    print("| arch | shape | compute s | memory s | collective s | dominant | "
+          "MODEL_FLOPS | useful ratio | limiter note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        u = r.get("useful_compute_ratio")
+        dom = rf["dominant"].replace("_s", "")
+        note = {
+            "memory": "HBM traffic (attn score streams / cache reads)",
+            "compute": "MXU matmuls",
+            "collective": "ICI collectives",
+        }[dom]
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} "
+              f"| {rf['memory_s']:.3f} | {rf['collective_s']:.3f} | {dom} "
+              f"| {r['model_flops_global']:.2e} "
+              f"| {u if u is None else f'{u:.3f}'} | {note} |")
+
+
+def main():
+    dirname = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load(dirname)
+    print(f"## Dry-run: {len(rows)} cells\n")
+    dryrun_table(rows)
+    print("\n## Roofline (single-pod 16x16, 256 chips)\n")
+    roofline_table(rows, "single")
+    print("\n## Roofline (multi-pod 2x16x16, 512 chips)\n")
+    roofline_table(rows, "multi")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: dense/MoE transformers, whisper enc-dec, RWKV6, Mamba2/Zamba2
+hybrid, Qwen2-VL backbone. Pure-functional JAX; scan-over-layers; chunked
+online-softmax attention (lowers on any backend with O(T*chunk) memory)."""

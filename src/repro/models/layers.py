@@ -1,0 +1,519 @@
+"""Shared layer library: RMSNorm, RoPE/M-RoPE, chunked GQA attention,
+SwiGLU/GeGLU MLP, GShard-style MoE, embeddings.
+
+All functions are pure; params are nested dicts of jnp arrays, and every
+init_* has a matching logical_* tree (see models/sharding.py) used to build
+PartitionSpecs. Math runs in f32 where numerics demand (softmax, norms,
+router), bf16 elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import MeshRules, NO_MESH
+
+# --------------------------------------------------------------------- utils
+def _dense_init(key, shape, in_dim, dtype):
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return jax.nn.gelu if name == "gelu" else jax.nn.silu
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); pos: (B, T) absolute positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (B, T, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, pos3: jax.Array, theta: float, sections: tuple[int, ...]
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. pos3: (3, B, T) = (temporal, h, w) ids;
+    frequency dims split into `sections` (sums to hd/2), each section
+    rotated by its own position stream."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # per-frequency position stream
+    sec_ids = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=hd // 2
+    )                                                    # (hd/2,) in {0,1,2}
+    pos_sel = jnp.take(pos3, sec_ids, axis=0)            # (hd/2, B, T)
+    angles = jnp.moveaxis(pos_sel, 0, -1).astype(jnp.float32) * freqs  # (B,T,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def _mask_chunk(p_i, q_pos, causal: bool, window):
+    """(B,1,1,Tq?,chunk) validity mask pieces; p_i: (B,chunk); q_pos: (B,Tq)."""
+    valid = p_i[:, None, None, None, :] >= 0
+    if causal:
+        valid &= p_i[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+    apply_window = not (isinstance(window, int) and window == 0)
+    if apply_window:
+        w = jnp.asarray(window, jnp.int32)
+        in_window = p_i[:, None, None, None, :] > (
+            q_pos[:, None, None, :, None] - w
+        )
+        valid &= in_window | (w <= 0)   # w==0 -> global layer (gemma3)
+    return valid
+
+
+def _flash_fwd_scan(qg, kc, vc, pc, q_pos, causal, window, scale):
+    """Online-softmax forward. qg: (B,Kv,G,Tq,hd); kc/vc: (n,B,chunk,Kv,hd);
+    pc: (n,B,chunk). Returns (out f32, lse f32) with lse = m + log l."""
+    b, kv_heads, g, tq, hd = qg.shape
+
+    def step(carry, xs):
+        acc, m, l = carry
+        k_i, v_i, p_i = xs
+        sc = jnp.einsum(
+            "bkgth,bckh->bkgtc", qg, k_i.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        ) * scale                                   # (B,Kv,G,Tq,chunk)
+        valid = _mask_chunk(p_i, q_pos, causal, window)
+        sc = jnp.where(valid, sc, -jnp.inf)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(valid, jnp.exp(sc - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgtc,bckh->bkgth", p.astype(qg.dtype), v_i.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kv_heads, g, tq, hd), dtype=jnp.float32)
+    m0 = jnp.full((b, kv_heads, g, tq), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((b, kv_heads, g, tq), dtype=jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    lse = jnp.where(jnp.isfinite(m), m, 0.0) + jnp.log(
+        jnp.maximum(l, 1e-30))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 7))
+def _flash(qg, kc, vc, pc, q_pos, causal, window, scale):
+    out, _ = _flash_fwd_scan(qg, kc, vc, pc, q_pos, causal, window, scale)
+    return out
+
+
+def _flash_fwd(qg, kc, vc, pc, q_pos, causal, window, scale):
+    out, lse = _flash_fwd_scan(qg, kc, vc, pc, q_pos, causal, window, scale)
+    return out, (qg, kc, vc, pc, q_pos, window, out, lse)
+
+
+def _flash_bwd(causal, scale, res, do):
+    """Flash backward: re-stream KV chunks, recompute p from lse — O(Tq *
+    chunk) live memory instead of O(Tq * S) saved residuals."""
+    qg, kc, vc, pc, q_pos, window, out, lse = res
+    do = do.astype(jnp.float32)
+    delta = jnp.sum(do * out, axis=-1)                    # (B,Kv,G,Tq)
+
+    def step(dq, xs):
+        k_i, v_i, p_i = xs
+        sc = jnp.einsum(
+            "bkgth,bckh->bkgtc", qg, k_i.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        valid = _mask_chunk(p_i, q_pos, causal, window)
+        p = jnp.where(valid, jnp.exp(sc - lse[..., None]), 0.0)
+        dv_i = jnp.einsum("bkgtc,bkgth->bckh", p.astype(do.dtype), do)
+        dp = jnp.einsum("bkgth,bckh->bkgtc", do, v_i.astype(do.dtype))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bkgtc,bckh->bkgth", ds.astype(qg.dtype),
+                             k_i.astype(qg.dtype),
+                             preferred_element_type=jnp.float32)
+        dk_i = jnp.einsum("bkgtc,bkgth->bckh", ds.astype(qg.dtype), qg,
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_i, dv_i)
+
+    dq0 = jnp.zeros(qg.shape, jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(step, dq0, (kc, vc, pc))
+    # cotangents for (qg, kc, vc, pc, q_pos, window) — ints get None
+    return (dq.astype(qg.dtype), dk.astype(kc.dtype), dv.astype(vc.dtype),
+            None, None, None)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,                  # (B, Tq, H, hd)
+    k: jax.Array,                  # (B, S, Kv, hd)
+    v: jax.Array,                  # (B, S, Kv, hd)
+    *,
+    q_pos: jax.Array,              # (B, Tq) absolute positions
+    kv_pos: jax.Array,             # (B, S) absolute positions; -1 = invalid
+    causal: bool = True,
+    window: int | jax.Array = 0,   # 0 = full; >0 = sliding window size;
+                                   # may be a traced scalar (per-layer scan)
+    chunk: int = 1024,
+    rules: MeshRules = NO_MESH,
+    k_scale: jax.Array | None = None,   # (B, S, Kv): int8-KV dequant scales
+    v_scale: jax.Array | None = None,   # (decode fast path only)
+) -> jax.Array:
+    """Flash attention (online softmax over KV chunks) with a custom VJP.
+
+    Pure jnp + lax.scan: O(Tq * chunk) live memory in BOTH directions; the
+    backward pass re-streams the KV chunks and recomputes probabilities
+    from the saved logsumexp instead of keeping O(Tq * S) scan residuals.
+    Lowers on any backend (DESIGN.md section 7).
+    """
+    b, tq, h, hd = q.shape
+    s, kv_heads = k.shape[1], k.shape[2]
+    g = h // kv_heads
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    quantized = k_scale is not None
+    assert not (quantized and tq != 1), "int8 KV is a decode-path feature"
+
+    if tq == 1:
+        # decode fast path: stream KV chunks with dynamic slices on the
+        # native (B, S, Kv, hd) cache layout — the scan path's reshape/
+        # moveaxis would materialize a transposed copy of the whole cache
+        # every layer, every step (EXPERIMENTS.md Perf, decode iteration)
+        qg1 = jnp.moveaxis(q.reshape(b, 1, kv_heads, g, hd), 1, 3
+                           ).astype(jnp.bfloat16)
+        scale1 = 1.0 / math.sqrt(hd)
+
+        def dstep(c, carry):
+            acc, m, l = carry
+            k_i = jax.lax.dynamic_slice_in_dim(k, c * chunk, chunk, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, c * chunk, chunk, axis=1)
+            p_i = jax.lax.dynamic_slice_in_dim(kv_pos, c * chunk, chunk,
+                                               axis=1)
+            if quantized:
+                # per-chunk dequant keeps the bf16 copy chunk-sized — the
+                # whole-cache dequant would forfeit the int8 memory win
+                ks_i = jax.lax.dynamic_slice_in_dim(k_scale, c * chunk,
+                                                    chunk, axis=1)
+                vs_i = jax.lax.dynamic_slice_in_dim(v_scale, c * chunk,
+                                                    chunk, axis=1)
+                k_i = (k_i.astype(jnp.bfloat16)
+                       * ks_i[..., None].astype(jnp.bfloat16))
+                v_i = (v_i.astype(jnp.bfloat16)
+                       * vs_i[..., None].astype(jnp.bfloat16))
+            sc = jnp.einsum(
+                "bkgth,bckh->bkgtc", qg1, k_i.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32) * scale1
+            valid = _mask_chunk(p_i, q_pos, causal, window)
+            sc = jnp.where(valid, sc, -jnp.inf)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(valid, jnp.exp(sc - m_safe[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgtc,bckh->bkgth", p.astype(jnp.bfloat16),
+                v_i.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new)
+
+        init = (jnp.zeros((b, kv_heads, g, 1, hd), jnp.float32),
+                jnp.full((b, kv_heads, g, 1), -jnp.inf, jnp.float32),
+                jnp.zeros((b, kv_heads, g, 1), jnp.float32))
+        acc, m, l = jax.lax.fori_loop(0, n_chunks, dstep, init)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, 1, h, hd)
+        return out.astype(q.dtype)
+
+    qg = jnp.moveaxis(
+        q.reshape(b, tq, kv_heads, g, hd), 1, 3
+    ).astype(jnp.bfloat16)                                # (B,Kv,G,Tq,hd)
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, kv_heads, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, kv_heads, hd), 1, 0)
+    pc = jnp.moveaxis(kv_pos.reshape(b, n_chunks, chunk), 1, 0)
+    scale = 1.0 / math.sqrt(hd)
+
+    window_arr = (jnp.asarray(window, jnp.int32) if not isinstance(window, int)
+                  else jnp.asarray(window, jnp.int32))
+    out = _flash(qg, kc, vc, pc, q_pos, causal, window_arr, scale)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, tq, h, hd)   # (B,Tq,H,hd)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------- GQA module
+def attn_shard_mode(cfg, rules: MeshRules, *, decode: bool = False) -> str:
+    """Tensor-shard layout when heads don't divide the tensor axis
+    (smollm 15H, gemma 8H, qwen2 12H on a 16-way axis):
+
+    * full-sequence steps (train/prefill) -> "seq": whole-layer sequence
+      parallelism (activations T-sharded, layer weights fsdp-only).
+      head_dim sharding was tried first and refuted: the QK contraction
+      over the sharded hd all-reduces score-sized tensors every chunk
+      (EXPERIMENTS.md Perf/smollm iteration 1).
+    * decode (Tq=1) -> "hd" when head_dim divides: scores are tiny, and
+      hd-sharding splits the KV cache + weight reads 16 ways.
+    """
+    if rules.mesh is None:
+        return "none"
+    ts = rules.mesh.shape[rules.tensor]
+    if cfg.num_heads % ts == 0 and cfg.num_kv_heads % ts == 0:
+        return "heads"
+    if cfg.num_heads % ts == 0 and not decode:
+        # grok-1: 48 Q-heads shard 16 ways; its 8 KV heads replicate and
+        # expand to MHA per shard (KV weights/activations are small)
+        return "heads_repkv"
+    if decode:
+        return "hd" if cfg.hd % ts == 0 else "none"
+    return "seq"
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": _dense_init(ks[1], (d, kv, hd), d, dtype),
+        "wv": _dense_init(ks[2], (d, kv, hd), d, dtype),
+        "wo": _dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def logical_attention(cfg, mode: str = "heads") -> dict:
+    if mode == "heads_repkv":
+        t = {
+            "wq": ("d", "tp", None),
+            "wk": ("d", None, None),
+            "wv": ("d", None, None),
+            "wo": ("tp", None, "d"),
+        }
+        if cfg.qkv_bias:
+            t |= {"bq": ("tp", None), "bk": (None, None), "bv": (None, None)}
+        return t
+    if mode == "hd":
+        t = {
+            "wq": ("d", None, "tp"),
+            "wk": ("d", None, "tp"),
+            "wv": ("d", None, "tp"),
+            "wo": (None, "tp", "d"),
+        }
+        bias = {"bq": (None, "tp"), "bk": (None, "tp"), "bv": (None, "tp")}
+    else:
+        t = {
+            "wq": ("d", "tp", None),
+            "wk": ("d", "tp", None),
+            "wv": ("d", "tp", None),
+            "wo": ("tp", None, "d"),
+        }
+        bias = {"bq": ("tp", None), "bk": ("tp", None), "bv": ("tp", None)}
+    if cfg.qkv_bias:
+        t |= bias
+    return t
+
+
+def attention_qkv(params, x, cfg):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def attention_out(params, o):
+    return jnp.einsum("bthk,hkd->btd", o, params["wo"])
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, cfg, dtype, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": _dense_init(ks[0], (d, f), d, dtype),
+        "wi_up": _dense_init(ks[1], (d, f), d, dtype),
+        "wo": _dense_init(ks[2], (f, d), f, dtype),
+    }
+
+
+def logical_mlp(cfg) -> dict:
+    return {"wi_gate": ("d", "tp"), "wi_up": ("d", "tp"), "wo": ("tp", "d")}
+
+
+def mlp(params, x, cfg):
+    gate = jnp.einsum("btd,df->btf", x, params["wi_gate"])
+    up = jnp.einsum("btd,df->btf", x, params["wi_up"])
+    return jnp.einsum("btf,fd->btd", act_fn(cfg.act)(gate) * up, params["wo"])
+
+
+# ----------------------------------------------------------------------- MoE
+def init_moe(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, e), d, jnp.float32),
+        "wi_gate": _dense_init(ks[1], (e, d, f), d, dtype),
+        "wi_up": _dense_init(ks[2], (e, d, f), d, dtype),
+        "wo": _dense_init(ks[3], (e, f, d), f, dtype),
+    }
+
+
+def logical_moe(cfg, ep: bool) -> dict:
+    """ep=True: experts sharded over tensor axis (expert parallelism);
+    else tensor-parallel inside each expert (grok-1: 8 experts < 16-way)."""
+    if ep:
+        return {
+            "router": ("d", None),
+            "wi_gate": ("tp", "d", None),
+            "wi_up": ("tp", "d", None),
+            "wo": ("tp", None, "d"),
+        }
+    return {
+        "router": ("d", None),
+        "wi_gate": (None, "d", "tp"),
+        "wi_up": (None, "d", "tp"),
+        "wo": (None, "tp", "d"),
+    }
+
+
+@dataclasses.dataclass
+class MoEAux:
+    load_balance_loss: jax.Array
+
+
+def moe(params, x, cfg, rules: MeshRules = NO_MESH,
+        group_size: int = 2048) -> tuple[jax.Array, MoEAux]:
+    """GShard-style dense-dispatch MoE (einsum formulation, shardable
+    without ragged ops).
+
+    Tokens are split into groups of `group_size` with per-group capacity —
+    the dispatch/combine tensors are (groups, G, E, C) with C = G*k*cf/E,
+    i.e. total size b*t*G*k*cf: linear in G, so small groups keep the
+    dispatch footprint bounded at long sequence lengths (32k prefill would
+    otherwise materialize multi-GiB one-hots per layer).
+    """
+    mcfg = cfg.moe
+    b_in, t_in, d = x.shape
+    g_sz = min(group_size, t_in)
+    if t_in % g_sz:
+        g_sz = t_in                      # fallback: one group per sequence
+    x = x.reshape(b_in * (t_in // g_sz), g_sz, d)
+    b, t, _ = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    cap = int(math.ceil(t * k * mcfg.capacity_factor / e))
+    cap = min(cap, t)
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                 # (b,t,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # position of each (token, slot) in its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)        # (b,t,k,e)
+    flat = onehot.reshape(b, t * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat                # (b,t*k,e)
+    pos = (pos_in_expert * flat).sum(-1).reshape(b, t, k)          # (b,t,k)
+    expert_sel = onehot                                            # (b,t,k,e)
+    keep = (pos < cap).astype(jnp.float32)
+    cap_onehot = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    # dispatch/combine tensors (b, t, e, cap)
+    dispatch = jnp.einsum("btke,btkc,btk->btec", expert_sel, cap_onehot, keep)
+    combine = jnp.einsum(
+        "btke,btkc,btk,btk->btec", expert_sel, cap_onehot, keep, gate_vals
+    )
+
+    xb = x.astype(jnp.bfloat16)
+    expert_in = jnp.einsum(
+        "btec,btd->becd", dispatch.astype(jnp.bfloat16), xb
+    )                                                              # (b,e,cap,d)
+    expert_in = rules.constrain(expert_in, ("batch", "tp", None, None))
+    gate_h = jnp.einsum("becd,edf->becf", expert_in, params["wi_gate"])
+    up_h = jnp.einsum("becd,edf->becf", expert_in, params["wi_up"])
+    h = act_fn(cfg.act)(gate_h) * up_h
+    expert_out = jnp.einsum("becf,efd->becd", h, params["wo"])
+    expert_out = rules.constrain(expert_out, ("batch", "tp", None, None))
+    out = jnp.einsum(
+        "btec,becd->btd", combine.astype(jnp.bfloat16), expert_out
+    ).astype(x.dtype)
+    out = out.reshape(b_in, t_in, d)
+
+    # switch-style load balance aux: E * sum(frac_tokens_e * frac_prob_e)
+    frac_tokens = onehot[:, :, 0, :].mean(axis=(0, 1))             # top-1 share
+    frac_probs = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out, MoEAux(load_balance_loss=aux)
+
+
+# ----------------------------------------------------------------- embedding
+def init_embed(key, cfg, dtype) -> dict:
+    return {
+        "table": _dense_init(key, (cfg.vocab_size, cfg.d_model), cfg.d_model, dtype)
+    }
+
+
+def logical_embed(cfg) -> dict:
+    return {"table": ("tp", "d")}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    return jnp.einsum(
+        "btd,vd->btv", x.astype(jnp.bfloat16), params["table"].astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ------------------------------------------------------------ int8 KV cache
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, T, Kv, hd) bf16 -> (int8 values, (B, T, Kv) f16 scales).
+
+    Per-(token, head) absmax scaling — halves KV-cache HBM (the
+    moonlight/grok decode_32k single-pod fit, EXPERIMENTS.md section 6)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)

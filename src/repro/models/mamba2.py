@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) block — scalar-per-head decay state-space model.
+
+Per head (P = head dim, N = ssm state):
+  h_t = a_t h_{t-1} + (dt_t x_t) (x) B_t          h: (P, N)
+  y_t = h_t C_t + D x_t
+  a_t = exp(-softplus(dt_raw_t + dt_bias) * exp(A_log))   (scalar/head)
+Chunked-parallel prefill (the SSD algorithm): with scalar decays the
+intra-chunk pair matrix exp(cs_i - cs_j) (i >= j) is computed directly —
+exponents are <= 0, no clamping needed. Short causal conv (kernel 4) over
+the x/B/C channels; decode keeps a rolling conv buffer + the SSM state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import MeshRules, NO_MESH
+
+CONV_K = 4
+MAMBA_HEAD_DIM = 64
+
+
+def dims(cfg: ArchConfig):
+    d_in = 2 * cfg.d_model
+    nheads = d_in // MAMBA_HEAD_DIM
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n
+    return d_in, nheads, n, conv_dim
+
+
+def init_layer(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nheads, n, conv_dim = dims(cfg)
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        # in_proj -> [z (d_in), x (d_in), B (n), C (n), dt (nheads)]
+        "w_in": L._dense_init(next(ks), (d, 2 * d_in + 2 * n + nheads), d, dtype),
+        "conv_w": L._dense_init(next(ks), (CONV_K, conv_dim), CONV_K, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "out_ln": jnp.zeros((d_in,), dtype),
+        "w_out": L._dense_init(next(ks), (d_in, d), d_in, dtype),
+    }
+
+
+def logical_layer(cfg: ArchConfig) -> dict:
+    return {
+        "ln": (None,),
+        "w_in": ("d", "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "A_log": (None,), "dt_bias": (None,), "D": (None,),
+        "out_ln": ("tp",),
+        "w_out": ("tp", "d"),
+    }
+
+
+def _split(zxbcdt, cfg):
+    d_in, nheads, n, _ = dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: d_in + d_in + 2 * n]
+    dt = zxbcdt[..., -nheads:]
+    return z, xbc, dt
+
+
+def _conv(xbc, conv_w, conv_b, conv_state):
+    """Causal depthwise conv, kernel CONV_K. conv_state: (B, CONV_K-1, C)
+    carries the last inputs from the previous segment."""
+    full = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    t = xbc.shape[1]
+    for i in range(CONV_K):
+        out = out + full[:, i: i + t] * conv_w[i]
+    new_state = full[:, -(CONV_K - 1):]
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def ssd_chunked(x, b_t, c_t, dt, lp, state, chunk: int):
+    """x: (B,T,H,P) f32; b_t,c_t: (B,T,N); dt: (B,T,H); state: (B,H,P,N)."""
+    bsz, t, h, p = x.shape
+    n = b_t.shape[-1]
+    dt_s = jax.nn.softplus(dt + lp["dt_bias"])                # (B,T,H)
+    loga = -dt_s * jnp.exp(lp["A_log"])                       # <= 0
+    dtx = x * dt_s[..., None]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        dtx = jnp.pad(dtx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_t = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+        c_t = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    nchunks = dtx.shape[1] // chunk
+    r4 = lambda z: jnp.moveaxis(z.reshape(bsz, nchunks, chunk, *z.shape[2:]), 1, 0)
+    xs_all = (r4(dtx), r4(b_t), r4(c_t), r4(loga))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))          # j <= i
+
+    def step(S, xs):
+        dx, bb, cc, la = xs                   # (B,C,H,P) (B,C,N) (B,C,H)
+        cs = jnp.cumsum(la, axis=1)           # (B,C,H) decreasing
+        # inter: y_i += C_i . (exp(cs_i) h0)
+        y_inter = jnp.einsum("bcn,bhpn,bch->bchp", cc, S, jnp.exp(cs))
+        # intra: pair (B,H,C,C): exp(cs_i - cs_j) * (C_i . B_j), j <= i
+        pair = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (B,i,j,H)
+        pair = jnp.where(causal[None, :, :, None], pair, 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cc, bb)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, pair, dx)
+        # state update: h_L = exp(cs_L) h0 + sum_j exp(cs_L - cs_j) dx_j (x) B_j
+        decay_end = jnp.exp(cs[:, -1:, :] - cs)               # (B,C,H)
+        S_new = S * jnp.exp(cs[:, -1])[..., None, None] + jnp.einsum(
+            "bchp,bcn,bch->bhpn", dx, bb, decay_end
+        )
+        return S_new, y_inter + y_intra
+
+    state, ys = jax.lax.scan(step, state, xs_all)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nchunks * chunk, h, p)[:, :t]
+    return y, state
+
+
+def block(lp, x, cfg, state, *, chunk: int, rules: MeshRules = NO_MESH):
+    """One Mamba2 block. state: {"ssm": (B,H,P,N), "conv": (B,K-1,conv_dim)}.
+    Returns (out, new_state)."""
+    bsz, t, d = x.shape
+    d_in, nheads, n, conv_dim = dims(cfg)
+    h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,de->bte", h, lp["w_in"])
+    z, xbc, dt = _split(zxbcdt, cfg)
+    xbc, conv_new = _conv(xbc, lp["conv_w"], lp["conv_b"], state["conv"])
+    xin = xbc[..., :d_in].astype(jnp.float32).reshape(bsz, t, nheads, MAMBA_HEAD_DIM)
+    b_t = xbc[..., d_in: d_in + n].astype(jnp.float32)
+    c_t = xbc[..., d_in + n:].astype(jnp.float32)
+    y, ssm_new = ssd_chunked(
+        xin, b_t, c_t, dt.astype(jnp.float32), lp, state["ssm"], chunk
+    )
+    y = y + lp["D"][None, None, :, None] * xin
+    y = y.reshape(bsz, t, d_in).astype(x.dtype) * jax.nn.silu(z)
+    y = L.rms_norm(y, lp["out_ln"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, lp["w_out"])
+    new_state = {"ssm": ssm_new, "conv": conv_new.astype(state["conv"].dtype)}
+    return out, new_state
+
+
+def init_state(cfg: ArchConfig, batch: int, num_layers: int,
+               rules: MeshRules = NO_MESH, dtype=jnp.bfloat16):
+    d_in, nheads, n, conv_dim = dims(cfg)
+    s = {
+        "ssm": jnp.zeros((num_layers, batch, nheads, MAMBA_HEAD_DIM, n),
+                         jnp.float32),
+        "conv": jnp.zeros((num_layers, batch, CONV_K - 1, conv_dim), dtype),
+    }
+    s["ssm"] = rules.constrain(s["ssm"], (None, "batch", "tp", None, None))
+    s["conv"] = rules.constrain(s["conv"], (None, "batch", None, "tp"))
+    return s
+
+
+def state_logical(cfg: ArchConfig) -> dict:
+    return {
+        "ssm": (None, "batch", "tp", None, None),
+        "conv": (None, "batch", None, "tp"),
+    }

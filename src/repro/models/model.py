@@ -1,0 +1,152 @@
+"""Uniform model API over all 10 architectures + input_specs for the
+dry-run (ShapeDtypeStruct stand-ins, weak-type-correct, no allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import rwkv6, transformer, whisper, zamba2
+from repro.models.sharding import MeshRules, NO_MESH
+
+
+def family_module(cfg: ArchConfig):
+    if cfg.is_encoder_decoder:
+        return whisper
+    if cfg.ssm_kind == "rwkv6":
+        return rwkv6
+    if cfg.shared_attn_every:
+        return zamba2
+    return transformer
+
+
+def init_params(key, cfg: ArchConfig):
+    return family_module(cfg).init_params(key, cfg)
+
+
+def logical_params(cfg: ArchConfig, rules: MeshRules, *, decode: bool = False):
+    mod = family_module(cfg)
+    if mod is transformer:
+        return mod.logical_tree(cfg, rules, decode=decode)
+    return mod.logical_tree(cfg, rules)
+
+
+# ------------------------------------------------------------------- losses
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def train_loss(params, cfg: ArchConfig, batch: dict, *, rules: MeshRules = NO_MESH,
+               chunk: int = 1024, remat: bool = True) -> jax.Array:
+    """Token-level LM loss (teacher-forced for enc-dec). MoE aux included."""
+    mod = family_module(cfg)
+    if cfg.is_encoder_decoder:
+        logits, aux = mod.forward(
+            params, cfg, batch["frames"], batch["tokens"], rules=rules,
+            chunk=chunk, remat=remat)
+    elif cfg.ssm_kind == "rwkv6":
+        logits, aux = mod.forward(params, cfg, batch["tokens"], rules=rules,
+                                  remat=remat)
+    elif cfg.shared_attn_every:
+        logits, aux = mod.forward(params, cfg, batch["tokens"], rules=rules,
+                                  attn_chunk=chunk, remat=remat)
+    else:
+        logits, aux = mod.forward(
+            params, cfg, batch["tokens"], rules=rules, chunk=chunk,
+            remat=remat, pos3=batch.get("pos3"),
+            vision_embeds=batch.get("vision_embeds"))
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------- serve API
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               rules: MeshRules = NO_MESH, kv_dtype: str = "bf16"):
+    mod = family_module(cfg)
+    if cfg.is_encoder_decoder:
+        raise ValueError("whisper serve state is built by serve.prefill")
+    if cfg.ssm_kind == "rwkv6":
+        return mod.init_state(cfg, batch, rules)
+    if mod is transformer:
+        return mod.init_cache(cfg, batch, max_len, rules, kv_dtype=kv_dtype)
+    return mod.init_cache(cfg, batch, max_len, rules)
+
+
+def cache_logical(cfg: ArchConfig, rules: MeshRules = NO_MESH,
+                  kv_dtype: str = "bf16"):
+    mod = family_module(cfg)
+    if cfg.ssm_kind == "rwkv6":
+        return mod.state_logical(cfg)
+    if mod is transformer:
+        return mod.cache_logical(cfg, rules, kv_dtype=kv_dtype)
+    return mod.cache_logical(cfg, rules)
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, *, rules=NO_MESH,
+                chunk: int = 4096, pos3=None):
+    mod = family_module(cfg)
+    if cfg.ssm_kind == "rwkv6":
+        return mod.decode_step(params, cfg, token, cache, rules=rules)
+    if cfg.shared_attn_every:
+        return mod.decode_step(params, cfg, token, cache, rules=rules,
+                               attn_chunk=chunk)
+    return mod.decode_step(params, cfg, token, cache, rules=rules,
+                           chunk=chunk, pos3=pos3)
+
+
+# -------------------------------------------------------------- input specs
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *, include_labels=True):
+    """ShapeDtypeStruct stand-ins for every model input of the given shape
+    cell (dry-run pattern: shardable, no device allocation). Frontends are
+    stubs: whisper gets frame embeddings, qwen2-vl patch embeddings."""
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            td = min(cfg.max_decoder_len, t)
+            specs = {
+                "frames": _sd((b, t, cfg.d_model), jnp.bfloat16),
+                "tokens": _sd((b, td), jnp.int32),
+            }
+            if include_labels and shape.kind == "train":
+                specs["labels"] = _sd((b, td), jnp.int32)
+            return specs
+        specs = {"tokens": _sd((b, t), jnp.int32)}
+        if cfg.mrope:
+            specs["pos3"] = _sd((3, b, t), jnp.int32)
+            specs["vision_embeds"] = _sd((b, min(256, t), cfg.d_model), jnp.bfloat16)
+        if include_labels and shape.kind == "train":
+            specs["labels"] = _sd((b, t), jnp.int32)
+        return specs
+    # decode: one new token against a seq_len cache
+    specs = {"token": _sd((b,), jnp.int32)}
+    if cfg.mrope:
+        specs["pos3"] = _sd((3, b, 1), jnp.int32)
+    return specs
+
+
+def batch_logical(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Logical sharding of the input batch."""
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            out = {"frames": ("batch", None, None), "tokens": ("batch", None)}
+            if shape.kind == "train":
+                out["labels"] = ("batch", None)
+            return out
+        out = {"tokens": ("batch", None)}
+        if cfg.mrope:
+            out["pos3"] = (None, "batch", None)
+            out["vision_embeds"] = ("batch", None, None)
+        if shape.kind == "train":
+            out["labels"] = ("batch", None)
+        return out
+    out = {"token": ("batch",)}
+    if cfg.mrope:
+        out["pos3"] = (None, "batch", None)
+    return out

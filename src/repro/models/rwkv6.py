@@ -1,0 +1,279 @@
+"""RWKV6 "Finch" — attention-free RNN with data-dependent per-channel decay.
+
+Recurrence per head (K = V = head_dim):
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+  o_t = r_t (S_{t-1} + diag(u (.) k_t)^T v_t)        (u = bonus)
+with w_t in (0,1)^K produced data-dependently (LoRA on the shifted input).
+
+Prefill uses the chunked-parallel form (chunk C): within a chunk, with
+cs = cumsum(log w) (negative, decreasing), decayed queries r~_i = r_i *
+exp(cs_{i-1} - cs_ref) and inflated keys k~_j = k_j * exp(cs_ref - cs_j)
+make the intra-chunk term a masked (r~ k~^T) v matmul whose exponents are
+bounded by the per-chunk total decay; we clamp log w at -LOG_CLAMP/C per
+step so exp stays in f32 range (decays stronger than that are numerically
+zero after a couple of steps anyway). Decode is the plain O(1) recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import MeshRules, NO_MESH
+
+LOG_CLAMP = 40.0  # max total |log-decay| per chunk (exp(40) ~ 2e17, f32-safe)
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _mix_names():
+    return ("r", "k", "v", "g", "w")
+
+
+def init_layer(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    h, hd = cfg.num_heads, cfg.hd
+    assert h * hd == d, "rwkv6 requires num_heads*head_dim == d_model"
+    lora = max(32, d // 32)
+    ks = iter(jax.random.split(key, 16))
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "mix": {f"mu_{n}": jnp.full((d,), 0.5, dtype) for n in _mix_names()},
+        "wr": L._dense_init(next(ks), (d, d), d, dtype),
+        "wk": L._dense_init(next(ks), (d, d), d, dtype),
+        "wv": L._dense_init(next(ks), (d, d), d, dtype),
+        "wg": L._dense_init(next(ks), (d, d), d, dtype),
+        "wo": L._dense_init(next(ks), (d, d), d, dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "wA": L._dense_init(next(ks), (d, lora), d, dtype),
+        "wB": L._dense_init(next(ks), (lora, d), lora, dtype),
+        "u": jnp.zeros((d,), jnp.float32),
+        "head_ln": jnp.zeros((h, hd), dtype),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": L._dense_init(next(ks), (d, cfg.d_ff), d, dtype),
+        "cm_wv": L._dense_init(next(ks), (cfg.d_ff, d), cfg.d_ff, dtype),
+        "cm_wr": L._dense_init(next(ks), (d, d), d, dtype),
+    }
+    return p
+
+
+def logical_layer(cfg: ArchConfig) -> dict:
+    d2 = ("d", "tp")
+    return {
+        "ln1": (None,), "ln2": (None,),
+        "mix": {f"mu_{n}": (None,) for n in _mix_names()},
+        "wr": d2, "wk": d2, "wv": d2, "wg": d2, "wo": ("tp", "d"),
+        "w0": (None,), "wA": ("d", None), "wB": (None, "tp"),
+        "u": (None,), "head_ln": (None, None),
+        "cm_mu_k": (None,), "cm_mu_r": (None,),
+        "cm_wk": ("d", "tp"), "cm_wv": ("tp", "d"), "cm_wr": ("d", "tp"),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dtype = _dtype(cfg)
+    k_embed, k_layers = jax.random.split(key)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(
+        jax.random.split(k_layers, cfg.num_layers)
+    )
+    return {
+        "embed": L.init_embed(k_embed, cfg, dtype),
+        "layers": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def logical_tree(cfg: ArchConfig, rules: MeshRules) -> dict:
+    per_layer = logical_layer(cfg)
+    stacked = jax.tree.map(
+        lambda lg: (None, *lg), per_layer,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    return {"embed": L.logical_embed(cfg), "layers": stacked,
+            "final_norm": (None,)}
+
+
+# ------------------------------------------------------------------ wkv core
+def _decays(lp, xw, cfg):
+    """w in (0,1)^(B,T,d) from the decay LoRA, f32, clamped."""
+    lora = jnp.einsum(
+        "btd,dl->btl", xw.astype(jnp.float32), lp["wA"].astype(jnp.float32)
+    )
+    dec = lp["w0"] + jnp.einsum(
+        "btl,ld->btd", jnp.tanh(lora), lp["wB"].astype(jnp.float32)
+    )
+    logw = -jnp.exp(dec)                       # < 0
+    return jnp.clip(logw, -LOG_CLAMP / 2, -1e-6)
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """Chunked-parallel WKV. r,k,v: (B,T,H,K) f32; logw: (B,T,H,K) f32;
+    u: (H,K); state: (B,H,K,K). Returns (out (B,T,H,K), new_state)."""
+    b, t, h, kk = r.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=-1e-6)
+    n = r.shape[1] // chunk
+    resh = lambda x: jnp.moveaxis(
+        x.reshape(b, n, chunk, h, kk), 1, 0
+    )                                           # (n, B, C, H, K)
+    rs, ks, vs, lws = resh(r), resh(k), resh(v), resh(logw)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+
+    def step(S, xs):
+        rc, kc, vc, lw = xs                     # (B,C,H,K)
+        cs = jnp.cumsum(lw, axis=1)             # decreasing, <0
+        cs_prev = cs - lw                       # cs_{i-1}
+        total = cs[:, -1:, :, :]                # (B,1,H,K)
+        r_dec = rc * jnp.exp(cs_prev)           # exponent <= 0
+        k_inf = kc * jnp.exp(total - cs)        # exponent <= 0
+        # inter-chunk: r_i C_{i-1} . S
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, S)
+        # intra-chunk: A_ij = (r_i e^{cs_{i-1}}) . (k_j e^{-cs_j}); factor
+        # the chunk total into k to keep exponents bounded by |total|<=CLAMP
+        a = jnp.einsum("bihk,bjhk->bhij", r_dec, kc * jnp.exp(-cs))
+        a = jnp.where(causal[None, None], a, 0.0)
+        o_intra = jnp.einsum("bhij,bjhv->bihv", a, vc)
+        # diagonal bonus term: (r_i . (u (.) k_i)) v_i
+        diag = jnp.einsum("bchk,bchk->bch", rc, kc * u[None, None])
+        o_diag = diag[..., None] * vc
+        # state to end of chunk
+        S_new = S * jnp.exp(total).squeeze(1)[..., None] + jnp.einsum(
+            "bchk,bchv->bhkv", k_inf, vc
+        )
+        return S_new, o_inter + o_intra + o_diag
+
+    state, outs = jax.lax.scan(step, state, (rs, ks, vs, lws))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n * chunk, h, kk)[:, :t]
+    return out, state
+
+
+# ------------------------------------------------------------------- forward
+def _token_shift(x, last):
+    """last: (B, d) previous token (zeros at seq start)."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def _time_mix(lp, x, cfg, state, last_x, *, chunk, rules):
+    b, t, d = x.shape
+    h, hd = cfg.num_heads, cfg.hd
+    prev = _token_shift(x, last_x)
+    mixed = {
+        n: x + (prev - x) * lp["mix"][f"mu_{n}"] for n in _mix_names()
+    }
+    f32 = jnp.float32
+    r = jnp.einsum("btd,de->bte", mixed["r"], lp["wr"]).astype(f32)
+    k = jnp.einsum("btd,de->bte", mixed["k"], lp["wk"]).astype(f32)
+    v = jnp.einsum("btd,de->bte", mixed["v"], lp["wv"]).astype(f32)
+    g = jnp.einsum("btd,de->bte", mixed["g"], lp["wg"])
+    logw = _decays(lp, mixed["w"], cfg)
+    hsplit = lambda z: z.reshape(b, t, h, hd)
+    u = lp["u"].reshape(h, hd)
+    out, state = wkv_chunked(
+        hsplit(r), hsplit(k), hsplit(v), hsplit(logw), u,
+        state, chunk=chunk,
+    )
+    # per-head normalization + gate
+    out = L.rms_norm(
+        out.astype(_dtype(cfg)), lp["head_ln"][None, None], cfg.norm_eps
+    )
+    out = out.reshape(b, t, d) * jax.nn.silu(g)
+    return jnp.einsum("btd,de->bte", out, lp["wo"]), state, x[:, -1]
+
+
+def _channel_mix(lp, x, cfg, last_x):
+    prev = _token_shift(x, last_x)
+    xk = x + (prev - x) * lp["cm_mu_k"]
+    xr = x + (prev - x) * lp["cm_mu_r"]
+    kk = jnp.einsum("btd,df->btf", xk, lp["cm_wk"])
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("btf,fd->btd", kk, lp["cm_wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, lp["cm_wr"]))
+    return rr * vv, x[:, -1]
+
+
+def init_state(cfg: ArchConfig, batch: int, rules: MeshRules = NO_MESH):
+    h, hd = cfg.num_heads, cfg.hd
+    s = {
+        "wkv": jnp.zeros((cfg.num_layers, batch, h, hd, hd), jnp.float32),
+        "last_tm": jnp.zeros((cfg.num_layers, batch, cfg.d_model), _dtype(cfg)),
+        "last_cm": jnp.zeros((cfg.num_layers, batch, cfg.d_model), _dtype(cfg)),
+    }
+    s["wkv"] = rules.constrain(s["wkv"], (None, "batch", "tp", None, None))
+    return s
+
+
+def state_logical(cfg: ArchConfig) -> dict:
+    return {
+        "wkv": (None, "batch", "tp", None, None),
+        "last_tm": (None, "batch", None),
+        "last_cm": (None, "batch", None),
+    }
+
+
+def forward(params, cfg: ArchConfig, tokens, *, state=None, rules=NO_MESH,
+            chunk: int = 64, remat: bool = True, return_state: bool = False,
+            last_only: bool = False):
+    """Full-sequence forward (train/prefill). chunk = WKV chunk length."""
+    b, t = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = rules.constrain(x, ("batch", None, None))
+    if state is None:
+        state = init_state(cfg, b, rules)
+
+    def body(x, xs):
+        lp, wkv_s, ltm, lcm = xs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        tm, wkv_new, ltm_new = _time_mix(
+            lp, h, cfg, wkv_s, ltm, chunk=chunk, rules=rules
+        )
+        x = x + tm.astype(x.dtype)
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        cm, lcm_new = _channel_mix(lp, h2, cfg, lcm)
+        x = x + cm.astype(x.dtype)
+        x = rules.constrain(x, ("batch", None, None))
+        return x, (wkv_new, ltm_new.astype(ltm.dtype), lcm_new.astype(lcm.dtype))
+
+    scan_body = jax.checkpoint(body) if remat else body
+    x, (wkv, ltm, lcm) = jax.lax.scan(
+        scan_body, x,
+        (params["layers"], state["wkv"], state["last_tm"], state["last_cm"]),
+    )
+    if last_only:
+        x = x[:, -1:]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    new_state = {"wkv": wkv, "last_tm": ltm, "last_cm": lcm}
+    if return_state:
+        return logits, new_state
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg, tokens, max_len=None, *, rules=NO_MESH, chunk=64):
+    logits, state = forward(
+        params, cfg, tokens, rules=rules, chunk=chunk, remat=False,
+        return_state=True, last_only=True,
+    )
+    return logits[:, -1], state
+
+
+def decode_step(params, cfg, token, state, *, rules=NO_MESH):
+    """O(1) recurrence — a single-token chunked call reuses the same code."""
+    logits, new_state = forward(
+        params, cfg, token[:, None], state=state, rules=rules, chunk=1,
+        remat=False, return_state=True,
+    )
+    return logits[:, -1], new_state

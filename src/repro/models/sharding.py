@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules.
+
+Every parameter/activation dimension carries a *logical* axis name; the
+MeshRules translate logical names to mesh axes, silently replicating any
+dimension the mesh cannot divide evenly (e.g. smollm's 15 heads on a
+16-way tensor axis fall back to head_dim sharding at the einsum level).
+
+Logical names:
+  "d"      — model width (FSDP-sharded over the data/pod axes)
+  "tp"     — tensor-parallel dim (heads / ffn / vocab / experts / head_dim)
+  "batch"  — activation batch (data/pod axes)
+  "seq"    — activation sequence (tensor axis; long-context decode caches)
+  None     — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh | None = None
+    fsdp: tuple[str, ...] = ("data",)
+    tensor: str = "model"
+
+    def _axes_for(self, logical: str | None):
+        if logical in ("d", "batch"):
+            return self.fsdp
+        if logical in ("tp", "seq"):
+            return (self.tensor,)
+        if logical is None:
+            return None
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def _axis_size(self, axes: tuple[str, ...]) -> int:
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def spec(self, logical: tuple, shape: tuple) -> P:
+        """PartitionSpec for `shape`, dropping non-divisible dims."""
+        if self.mesh is None:
+            return P()
+        parts = []
+        used: set[str] = set()
+        for name, dim in zip(logical, shape):
+            axes = self._axes_for(name)
+            if (
+                axes is None
+                or any(a in used for a in axes)
+                or dim % self._axis_size(axes) != 0
+            ):
+                parts.append(None)
+            else:
+                parts.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+        return P(*parts)
+
+    def sharding(self, logical: tuple, shape: tuple) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    def constrain(self, x: jax.Array, logical: tuple) -> jax.Array:
+        """with_sharding_constraint by logical names (no-op off-mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical, x.shape))
+        )
+
+
+# Default CPU/test rules: no mesh, everything replicated, constraints no-op.
+NO_MESH = MeshRules(mesh=None)
+
+
+def _is_logical_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_specs(rules: MeshRules, params, logical_tree):
+    """Map a params tree + matching logical tree -> PartitionSpec tree.
+
+    Logical leaves are tuples of axis names (one per array dim; () for
+    scalars); params trees are nested dicts of arrays with an identical
+    structure.
+    """
+    return jax.tree.map(
+        lambda logical, arr: rules.spec(tuple(logical), arr.shape),
+        logical_tree,
+        params,
+        is_leaf=_is_logical_leaf,
+    )
+
+
+def tree_shardings(rules: MeshRules, params, logical_tree):
+    if rules.mesh is None:
+        return None
+    return jax.tree.map(
+        lambda logical, arr: NamedSharding(
+            rules.mesh, rules.spec(tuple(logical), arr.shape)
+        ),
+        logical_tree,
+        params,
+        is_leaf=_is_logical_leaf,
+    )
+
+
+def tree_constrain(rules: MeshRules, tree, logical_tree):
+    """with_sharding_constraint over a whole tree by logical names."""
+    if rules.mesh is None:
+        return tree
+    return jax.tree.map(
+        lambda logical, arr: rules.constrain(arr, tuple(logical)),
+        logical_tree,
+        tree,
+        is_leaf=_is_logical_leaf,
+    )
+
+
+def kv_cache_axes(num_kv_heads: int, head_dim: int, rules: MeshRules):
+    """Pick the tensor-sharded dim of a (L, B, S, kv, hd) KV cache.
+
+    Prefer kv heads, then head_dim, then sequence. kv/hd sharding keeps the
+    S axis unsharded so dynamic window slices and cache writes never force
+    an SPMD gather (the seq fallback is only ever hit off-mesh)."""
+    if rules.mesh is None:
+        return (None, "batch", None, None, None)
+    ts = rules.mesh.shape[rules.tensor]
+    if num_kv_heads % ts == 0:
+        return (None, "batch", None, "tp", None)
+    if head_dim % ts == 0:
+        return (None, "batch", None, None, "tp")
+    return (None, "batch", "seq", None, None)

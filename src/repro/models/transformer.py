@@ -1,0 +1,447 @@
+"""Decoder-only transformer covering the dense, MoE, sliding-window
+(gemma3) and M-RoPE VLM (qwen2-vl) architectures.
+
+Uniform pre-norm residual blocks; layers are stacked and scanned (compile
+time / HLO size at 64+ layers). KV caches are (L, B, S, Kv, hd) stacked and
+threaded through the same scan. Simplifications vs the public checkpoints
+(uniform pre-norm, single rope theta, all-MoE layer stacks) are documented
+in DESIGN.md section 6 — dimensions, head/expert structure and attention
+patterns follow the assigned specs exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import MeshRules, NO_MESH
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------- params
+def init_layer(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg, dtype)
+    return p
+
+
+def logical_layer(cfg: ArchConfig, ep: bool, attn_mode: str = "heads") -> dict:
+    t = {
+        "ln1": (None,),
+        "attn": L.logical_attention(cfg, attn_mode),
+        "ln2": (None,),
+    }
+    if cfg.moe is not None:
+        t["moe"] = L.logical_moe(cfg, ep)
+    else:
+        t["mlp"] = L.logical_mlp(cfg)
+    return t
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dtype = _dtype(cfg)
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": L.init_embed(k_embed, cfg, dtype),
+        "layers": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def logical_tree(cfg: ArchConfig, rules: MeshRules, *,
+                 decode: bool = False) -> dict:
+    ep = False
+    if cfg.moe is not None and rules.mesh is not None:
+        ep = cfg.moe.num_experts % rules.mesh.shape[rules.tensor] == 0
+    mode = L.attn_shard_mode(cfg, rules, decode=decode)
+    per_layer = logical_layer(cfg, ep, mode if mode != "seq" else "heads")
+    if mode == "seq":
+        # whole-layer sequence parallelism: layer weights are fsdp-only
+        # (replicating a <=4B model's weights over the tensor axis is
+        # cheap; activations carry the tensor axis on T instead)
+        per_layer = jax.tree.map(
+            lambda lg: tuple(None if a == "tp" else a for a in lg),
+            per_layer,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+    # stacked layers gain a leading (replicated) layer dim
+    stacked = jax.tree.map(
+        lambda lg: (None, *lg),
+        per_layer,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    return {
+        "embed": L.logical_embed(cfg),
+        "layers": stacked,
+        "final_norm": (None,),
+    }
+
+
+def layer_windows(cfg: ArchConfig) -> jax.Array:
+    """Per-layer attention window (0 = full/global). gemma3: 5 local : 1
+    global — layer i is global iff (i+1) % global_every == 0."""
+    idx = jnp.arange(cfg.num_layers)
+    if cfg.attn_kind == "sliding":
+        if cfg.global_every > 0:
+            is_global = (idx + 1) % cfg.global_every == 0
+            return jnp.where(is_global, 0, cfg.sliding_window).astype(jnp.int32)
+        return jnp.full((cfg.num_layers,), cfg.sliding_window, jnp.int32)
+    return jnp.zeros((cfg.num_layers,), jnp.int32)
+
+
+# ------------------------------------------------------------------- blocks
+def _attn_block(lp, x, cfg, *, q_pos, k_cache, v_cache, kv_pos, window,
+                pos3, rules, chunk, mode="heads"):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.attention_qkv(lp["attn"], h, cfg)
+    if cfg.mrope and pos3 is not None:
+        q = L.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = L.apply_rope(q, q_pos, cfg.rope_theta)
+        k = L.apply_rope(k, q_pos, cfg.rope_theta)
+    qspec = {"heads": ("batch", None, "tp", None),
+             "heads_repkv": ("batch", None, "tp", None),
+             "hd": ("batch", None, None, "tp"),
+             "seq": ("batch", "seq", None, None),
+             "none": ("batch", None, None, None)}[mode]
+    q = rules.constrain(q, qspec)
+    k_new, v_new = k, v            # cache-bound KV: original kv heads
+    if mode == "seq":
+        # queries stay T-sharded; keys/values gather (GQA KV is small)
+        k = rules.constrain(k, ("batch", None, None, None))
+        v = rules.constrain(v, ("batch", None, None, None))
+    elif mode == "heads_repkv":
+        # expand GQA -> MHA so the head axis shards cleanly (grok: 8 kv
+        # heads cannot split a 16-way axis; repeated KV shards with Q)
+        g = cfg.num_heads // cfg.num_kv_heads
+        k = rules.constrain(jnp.repeat(k, g, axis=2), qspec)
+        v = rules.constrain(jnp.repeat(v, g, axis=2), qspec)
+    else:
+        k = rules.constrain(k, qspec)
+        v = rules.constrain(v, qspec)
+        k_new, v_new = k, v
+    if k_cache is not None:                      # decode: attend to cache
+        k_all, v_all, kv_p = k_cache, v_cache, kv_pos
+    else:                                        # train/prefill: self k/v
+        k_all, v_all, kv_p = k, v, q_pos
+    o = L.chunked_attention(
+        q, k_all, v_all, q_pos=q_pos, kv_pos=kv_p,
+        causal=True, window=window, chunk=chunk, rules=rules,
+    )
+    return x + L.attention_out(lp["attn"], o), k_new, v_new
+
+
+def _ffn_block(lp, x, cfg, rules):
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        out, aux = L.moe(lp["moe"], h, cfg, rules)
+        return x + out, aux.load_balance_loss
+    return x + L.mlp(lp["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------ forward
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens: jax.Array,                  # (B, T) int32
+    *,
+    positions: jax.Array | None = None,  # (B, T) absolute; default arange
+    pos3: jax.Array | None = None,       # (3, B, T) for M-RoPE
+    vision_embeds: jax.Array | None = None,  # (B, Tv, d) stub frontend
+    rules: MeshRules = NO_MESH,
+    chunk: int = 1024,
+    remat: bool = True,
+    collect_cache: bool = False,
+    last_only: bool = False,
+):
+    """Full-sequence forward. Returns (logits, aux_loss[, (k_stack, v_stack)])."""
+    b, t = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if vision_embeds is not None:
+        tv = min(vision_embeds.shape[1], t)
+        x = x.at[:, :tv, :].set(vision_embeds[:, :tv].astype(x.dtype))
+    mode = L.attn_shard_mode(cfg, rules)
+    xspec = ("batch", "seq", None) if mode == "seq" else ("batch", None, None)
+    x = rules.constrain(x, xspec)
+    q_pos = positions if positions is not None else jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[None, :], (b, t)
+    )
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, window = xs
+        x, k, v = _attn_block(
+            lp, x, cfg, q_pos=q_pos, k_cache=None, v_cache=None, kv_pos=None,
+            window=window, pos3=pos3, rules=rules, chunk=chunk, mode=mode,
+        )
+        x, lb = _ffn_block(lp, x, cfg, rules)
+        x = rules.constrain(x, xspec)
+        if collect_cache:
+            # shard the emitted KV (kv heads, else head_dim, else seq):
+            # grok's kv=8 < 16-way tensor axis would otherwise replicate
+            # multi-GiB per-layer caches across the tensor axis
+            from repro.models.sharding import kv_cache_axes
+            kv_axes = kv_cache_axes(cfg.num_kv_heads, cfg.hd, rules)[1:]
+            ys = (rules.constrain(k, kv_axes),
+                  rules.constrain(v, kv_axes))
+        else:
+            ys = None
+        return (x, aux + lb), ys
+
+    scan_body = jax.checkpoint(body) if remat else body
+    (x, aux), kv = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                                (params["layers"], windows))
+    if last_only:
+        x = x[:, -1:]
+    if mode == "seq":
+        x = rules.constrain(x, ("batch", None, None))  # free T for vocab-tp
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    if collect_cache:
+        return logits, aux, kv
+    return logits, aux
+
+
+# -------------------------------------------------------------------- cache
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               rules: MeshRules = NO_MESH, kv_dtype: str = "bf16"):
+    from repro.models.sharding import kv_cache_axes
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    dtype = jnp.int8 if kv_dtype == "int8" else _dtype(cfg)
+    axes = kv_cache_axes(kv, hd, rules)
+    k = jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype)
+    v = jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype)
+    k = rules.constrain(k, axes)
+    v = rules.constrain(v, axes)
+    cache = {
+        "k": k,
+        "v": v,
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+    if kv_dtype == "int8":
+        sc_axes = axes[:3] + (axes[3],)
+        cache["k_scale"] = rules.constrain(
+            jnp.zeros((cfg.num_layers, batch, max_len, kv), jnp.float16),
+            sc_axes)
+        cache["v_scale"] = rules.constrain(
+            jnp.zeros((cfg.num_layers, batch, max_len, kv), jnp.float16),
+            sc_axes)
+    return cache
+
+
+def cache_logical(cfg: ArchConfig, rules: MeshRules = NO_MESH,
+                  kv_dtype: str = "bf16") -> dict:
+    from repro.models.sharding import kv_cache_axes
+    axes = kv_cache_axes(cfg.num_kv_heads, cfg.hd, rules)
+    out = {
+        "k": axes,
+        "v": axes,
+        "pos": ("batch", None),
+        "idx": (),
+    }
+    if kv_dtype == "int8":
+        out["k_scale"] = axes[:4]
+        out["v_scale"] = axes[:4]
+    return out
+
+
+def prefill(params, cfg, tokens, max_len: int, *, rules=NO_MESH, chunk=1024,
+            pos3=None, vision_embeds=None, kv_dtype: str = "bf16"):
+    """Run the full prompt, build the cache. Returns (last_logits, cache)."""
+    b, t = tokens.shape
+    logits, _, (k_stack, v_stack) = forward(
+        params, cfg, tokens, rules=rules, chunk=chunk, collect_cache=True,
+        pos3=pos3, vision_embeds=vision_embeds, remat=False, last_only=True,
+    )
+    cache = init_cache(cfg, b, max_len, rules, kv_dtype=kv_dtype)
+    if kv_dtype == "int8":
+        k_stack, ks = jax.vmap(L.quantize_kv)(k_stack)
+        v_stack, vs = jax.vmap(L.quantize_kv)(v_stack)
+        cache["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks.astype(jnp.float16), (0, 0, 0, 0))
+        cache["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs.astype(jnp.float16), (0, 0, 0, 0))
+    # scan stacks ys on axis 0 -> (L, B, T, kv, hd)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k_stack.astype(cache["k"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v_stack.astype(cache["v"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["pos"] = jax.lax.dynamic_update_slice(
+        cache["pos"],
+        jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t)),
+        (0, 0),
+    )
+    cache["idx"] = jnp.array(t, jnp.int32)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, token, cache, *, rules=NO_MESH, chunk=4096,
+                pos3=None, window_slice: bool = True):
+    """One decode step. token: (B,) int32. Returns (logits, new_cache).
+
+    For sliding-window layers (`window_slice=True`, gemma3), attention
+    reads only the last `sliding_window` cache entries via a static-size
+    dynamic slice instead of masking the full-length cache — at 500k
+    context this drops per-step attention FLOPs/bytes by ~window/S for the
+    29/34 local layers (EXPERIMENTS.md section Perf)."""
+    b = token.shape[0]
+    x = L.embed(params["embed"], token[:, None])
+    q_pos = jnp.broadcast_to(cache["idx"][None, None], (b, 1)).astype(jnp.int32)
+    windows = layer_windows(cfg)
+    idx = cache["idx"]
+    kv_pos_full = jax.lax.dynamic_update_slice(cache["pos"], q_pos, (0, idx))
+    max_len = cache["k"].shape[2]
+    w = cfg.sliding_window
+    use_slicing = (window_slice and cfg.attn_kind == "sliding"
+                   and w < max_len)
+
+    dec_mode = L.attn_shard_mode(cfg, rules, decode=True)
+    qspec = {"heads": ("batch", None, "tp", None),
+             "hd": ("batch", None, None, "tp"),
+             "none": ("batch", None, None, None)}[dec_mode]
+    quantized = "k_scale" in cache
+
+    def attn(lp, x, k_c, v_c, window, sliced: bool, ks_c=None, vs_c=None):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], h, cfg)
+        q = rules.constrain(q, qspec)
+        if cfg.mrope and pos3 is not None:
+            q = L.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+            k = L.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = L.apply_rope(q, q_pos, cfg.rope_theta)
+            k = L.apply_rope(k, q_pos, cfg.rope_theta)
+        if quantized:
+            k, ksc = L.quantize_kv(k)
+            v, vsc = L.quantize_kv(v)
+            ks_c = jax.lax.dynamic_update_slice(
+                ks_c, ksc.astype(ks_c.dtype), (0, idx, 0))
+            vs_c = jax.lax.dynamic_update_slice(
+                vs_c, vsc.astype(vs_c.dtype), (0, idx, 0))
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype),
+                                           (0, idx, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype),
+                                           (0, idx, 0, 0))
+        ks_at = vs_at = None
+        if sliced:
+            start = jnp.maximum(idx - (w - 1), 0)
+            k_at = jax.lax.dynamic_slice_in_dim(k_c, start, w, axis=1)
+            v_at = jax.lax.dynamic_slice_in_dim(v_c, start, w, axis=1)
+            kv_p = jax.lax.dynamic_slice_in_dim(kv_pos_full, start, w, axis=1)
+            if quantized:
+                ks_at = jax.lax.dynamic_slice_in_dim(ks_c, start, w, axis=1)
+                vs_at = jax.lax.dynamic_slice_in_dim(vs_c, start, w, axis=1)
+        else:
+            k_at, v_at, kv_p = k_c, v_c, kv_pos_full
+            if quantized:
+                ks_at, vs_at = ks_c, vs_c
+        o = L.chunked_attention(
+            q, k_at, v_at, q_pos=q_pos, kv_pos=kv_p, causal=True,
+            window=window, chunk=chunk, rules=rules,
+            k_scale=ks_at, v_scale=vs_at,
+        )
+        x = x + L.attention_out(lp["attn"], o)
+        x, _ = _ffn_block(lp, x, cfg, rules)
+        return x, k_c, v_c, ks_c, vs_c
+
+    if not use_slicing:
+        if quantized:
+            def body(carry, xs):
+                x = carry
+                lp, window, k_c, v_c, ks_c, vs_c = xs
+                x, k_c, v_c, ks_c, vs_c = attn(
+                    lp, x, k_c, v_c, window, sliced=False,
+                    ks_c=ks_c, vs_c=vs_c)
+                return x, (k_c, v_c, ks_c, vs_c)
+
+            x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+                body, x, (params["layers"], windows, cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]))
+        else:
+            def body(carry, xs):
+                x = carry
+                lp, window, k_c, v_c = xs
+                x, k_c, v_c, _, _ = attn(lp, x, k_c, v_c, window,
+                                         sliced=False)
+                return x, (k_c, v_c)
+
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], windows, cache["k"], cache["v"]))
+    else:
+        # block structure: contiguous runs of local (windowed) layers are
+        # scanned with sliced caches; global layers run individually with
+        # the full cache.
+        ge = cfg.global_every
+        is_global = [ge > 0 and (i + 1) % ge == 0
+                     for i in range(cfg.num_layers)]
+        k_new = cache["k"]
+        v_new = cache["v"]
+
+        def local_block(x, lo, hi):
+            seg = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+
+            def body(carry, xs):
+                x = carry
+                lp, k_c, v_c = xs
+                x, k_c, v_c, _, _ = attn(lp, x, k_c, v_c,
+                                         jnp.asarray(w, jnp.int32),
+                                         sliced=True)
+                return x, (k_c, v_c)
+
+            x, (k_seg, v_seg) = jax.lax.scan(
+                body, x, (seg, k_new[lo:hi], v_new[lo:hi]))
+            return x, k_seg, v_seg
+
+        i = 0
+        while i < cfg.num_layers:
+            if is_global[i]:
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, k_i, v_i, _, _ = attn(lp, x, k_new[i], v_new[i],
+                                         jnp.asarray(0, jnp.int32),
+                                         sliced=False)
+                k_new = k_new.at[i].set(k_i)
+                v_new = v_new.at[i].set(v_i)
+                i += 1
+            else:
+                j = i
+                while j < cfg.num_layers and not is_global[j]:
+                    j += 1
+                x, k_seg, v_seg = local_block(x, i, j)
+                k_new = jax.lax.dynamic_update_slice_in_dim(
+                    k_new, k_seg, i, axis=0)
+                v_new = jax.lax.dynamic_update_slice_in_dim(
+                    v_new, v_seg, i, axis=0)
+                i = j
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k_new, v_new
+    if quantized and not use_slicing:
+        new_cache["k_scale"], new_cache["v_scale"] = ks_new, vs_new
+    new_cache["pos"] = kv_pos_full
+    new_cache["idx"] = idx + 1
+    return logits, new_cache

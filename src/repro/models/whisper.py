@@ -1,0 +1,237 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Encoder consumes precomputed frame embeddings (B, T_enc, d) — the conv
+frontend is a stub per the assignment; `input_specs()` supplies the
+embeddings. Sinusoidal positions, bidirectional self-attention, plain GELU
+MLP. Decoder: causal self-attention (cached for decode) + cross-attention
+to the encoder memory (K/V precomputed once at prefill).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import MeshRules, NO_MESH
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def sinusoid(t: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def init_plain_mlp(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": L._dense_init(ks[0], (cfg.d_model, cfg.d_ff), cfg.d_model, dtype),
+        "wo": L._dense_init(ks[1], (cfg.d_ff, cfg.d_model), cfg.d_ff, dtype),
+    }
+
+
+def logical_plain_mlp():
+    return {"wi": ("d", "tp"), "wo": ("tp", "d")}
+
+
+def plain_mlp(p, x):
+    return jnp.einsum("btf,fd->btd", jax.nn.gelu(
+        jnp.einsum("btd,df->btf", x, p["wi"])), p["wo"])
+
+
+def init_enc_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_plain_mlp(ks[1], cfg, dtype),
+    }
+
+
+def init_dec_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "self_attn": L.init_attention(ks[0], cfg, dtype),
+        "ln_x": jnp.zeros((cfg.d_model,), dtype),
+        "cross_attn": L.init_attention(ks[1], cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_plain_mlp(ks[2], cfg, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dtype = _dtype(cfg)
+    k_embed, k_enc, k_dec = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg, dtype))(
+        jax.random.split(k_enc, cfg.encoder_layers))
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg, dtype))(
+        jax.random.split(k_dec, cfg.num_layers))
+    return {
+        "embed": L.init_embed(k_embed, cfg, dtype),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def logical_tree(cfg: ArchConfig, rules: MeshRules) -> dict:
+    stack = lambda tree: jax.tree.map(
+        lambda lg: (None, *lg), tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    mode = L.attn_shard_mode(cfg, rules)
+    enc = {"ln1": (None,), "attn": L.logical_attention(cfg, mode),
+           "ln2": (None,), "mlp": logical_plain_mlp()}
+    dec = {"ln1": (None,), "self_attn": L.logical_attention(cfg, mode),
+           "ln_x": (None,), "cross_attn": L.logical_attention(cfg, mode),
+           "ln2": (None,), "mlp": logical_plain_mlp()}
+    return {
+        "embed": L.logical_embed(cfg),
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "enc_norm": (None,), "dec_norm": (None,),
+    }
+
+
+# ------------------------------------------------------------------ encoder
+def encode(params, cfg, frames, *, rules=NO_MESH, chunk=1024, remat=True):
+    """frames: (B, T_enc, d) stub embeddings -> (B, T_enc, d) memory."""
+    b, t, d = frames.shape
+    x = frames.astype(_dtype(cfg)) + sinusoid(t, d).astype(_dtype(cfg))
+    x = rules.constrain(x, ("batch", None, None))
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], h, cfg)
+        o = L.chunked_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=False,
+                                chunk=chunk, rules=rules)
+        x = x + L.attention_out(lp["attn"], o)
+        x = x + plain_mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return rules.constrain(x, ("batch", None, None)), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ decoder
+def cross_kv(params, cfg, memory, rules=NO_MESH):
+    """Precompute cross-attention K/V for all decoder layers:
+    (L, B, T_enc, kv, hd) each, kv heads sharded on the tensor axis."""
+    def per_layer(lp):
+        k = jnp.einsum("btd,dhk->bthk", memory, lp["cross_attn"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", memory, lp["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            k = k + lp["cross_attn"]["bk"]
+            v = v + lp["cross_attn"]["bv"]
+        return k, v
+    xk, xv = jax.vmap(per_layer)(params["dec_layers"])
+    xk = rules.constrain(xk, (None, "batch", None, "tp", None))
+    xv = rules.constrain(xv, (None, "batch", None, "tp", None))
+    return xk, xv
+
+
+def decode(params, cfg, tokens, memory=None, *, xk=None, xv=None,
+           self_cache=None, rules=NO_MESH, chunk=1024, remat=True,
+           start_pos=0):
+    """Decoder forward. Either `memory` (computes cross K/V) or
+    precomputed (xk, xv). self_cache: {"k","v","pos","idx"} stacked (L,...)
+    for incremental decoding; None for teacher-forced training."""
+    b, t = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    d = x.shape[-1]
+    if xk is None:
+        xk, xv = cross_kv(params, cfg, memory)
+    enc_t = xk.shape[2]
+    mem_pos = jnp.broadcast_to(jnp.arange(enc_t, dtype=jnp.int32)[None],
+                               (b, enc_t))
+    idx = self_cache["idx"] if self_cache is not None else jnp.array(0, jnp.int32)
+    q_pos = idx[None, None] + jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[None], (b, t)) if self_cache is not None \
+        else jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    x = x + jnp.take(sinusoid(cfg.max_decoder_len, d).astype(x.dtype),
+                     jnp.clip(q_pos[0], 0, cfg.max_decoder_len - 1), axis=0)
+    x = rules.constrain(x, ("batch", None, None))
+
+    use_cache = self_cache is not None
+    if use_cache:
+        kv_pos = jax.lax.dynamic_update_slice(self_cache["pos"], q_pos, (0, idx))
+
+    def body(x, xs):
+        if use_cache:
+            lp, xk_l, xv_l, kc, vc = xs
+        else:
+            lp, xk_l, xv_l = xs
+            kc = vc = None
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["self_attn"], h, cfg)
+        if use_cache:
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                              (0, idx, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                              (0, idx, 0, 0))
+            o = L.chunked_attention(q, kc, vc, q_pos=q_pos, kv_pos=kv_pos,
+                                    causal=True, chunk=chunk, rules=rules)
+        else:
+            o = L.chunked_attention(q, k, v, q_pos=q_pos, kv_pos=q_pos,
+                                    causal=True, chunk=chunk, rules=rules)
+        x = x + L.attention_out(lp["self_attn"], o)
+        hx = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("btd,dhk->bthk", hx, lp["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            qx = qx + lp["cross_attn"]["bq"]
+        ox = L.chunked_attention(qx, xk_l, xv_l, q_pos=q_pos, kv_pos=mem_pos,
+                                 causal=False, chunk=chunk, rules=rules)
+        x = x + L.attention_out(lp["cross_attn"], ox)
+        x = x + plain_mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps))
+        x = rules.constrain(x, ("batch", None, None))
+        ys = (kc, vc) if use_cache else None
+        return x, ys
+
+    fn = jax.checkpoint(body) if (remat and not use_cache) else body
+    if use_cache:
+        x, (k_new, v_new) = jax.lax.scan(
+            fn, x, (params["dec_layers"], xk, xv,
+                    self_cache["k"], self_cache["v"]))
+    else:
+        x, _ = jax.lax.scan(fn, x, (params["dec_layers"], xk, xv))
+    x = L.rms_norm(x, params["dec_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    if use_cache:
+        new_cache = {
+            "k": k_new, "v": v_new,
+            "pos": kv_pos, "idx": idx + t,
+        }
+        return logits, new_cache
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_self_cache(cfg, batch, max_len, rules=NO_MESH):
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    dtype = _dtype(cfg)
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward(params, cfg, frames, tokens, *, rules=NO_MESH, chunk=1024,
+            remat=True):
+    """Teacher-forced train forward: (enc frames, dec tokens) -> logits."""
+    memory = encode(params, cfg, frames, rules=rules, chunk=chunk, remat=remat)
+    return decode(params, cfg, tokens, memory, rules=rules, chunk=chunk,
+                  remat=remat)

@@ -1,0 +1,228 @@
+"""Zamba2 — Mamba2 backbone with a single *shared* attention block applied
+every `shared_attn_every` layers.
+
+The shared block (one set of weights, ~13 application points at 81 layers)
+takes concat(hidden, initial_embedding) fused to width d by a small
+per-application adapter (Zamba2's unshared LoRA adapters, simplified to one
+dense per application), then runs a standard attention + MLP block with its
+own KV cache slot per application point. See DESIGN.md section 6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.sharding import MeshRules, NO_MESH
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def num_shared_points(cfg: ArchConfig) -> int:
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dtype = _dtype(cfg)
+    d = cfg.d_model
+    npts = num_shared_points(cfg)
+    k_embed, k_layers, k_shared, k_adapt = jax.random.split(key, 4)
+    stacked = jax.vmap(lambda k: mamba2.init_layer(k, cfg, dtype))(
+        jax.random.split(k_layers, cfg.num_layers)
+    )
+    ks = jax.random.split(k_shared, 2)
+    shared = {
+        "ln1": jnp.zeros((d,), dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "mlp": L.init_mlp(ks[1], cfg, dtype),
+    }
+    adapters = jax.vmap(
+        lambda k: L._dense_init(k, (2 * d, d), 2 * d, dtype)
+    )(jax.random.split(k_adapt, npts))
+    return {
+        "embed": L.init_embed(k_embed, cfg, dtype),
+        "layers": stacked,
+        "shared": shared,
+        "adapters": adapters,           # (npts, 2d, d)
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+
+
+def logical_tree(cfg: ArchConfig, rules: MeshRules) -> dict:
+    per_layer = mamba2.logical_layer(cfg)
+    stack = lambda tree: jax.tree.map(
+        lambda lg: (None, *lg), tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    return {
+        "embed": L.logical_embed(cfg),
+        "layers": stack(per_layer),
+        "shared": {
+            "ln1": (None,),
+            "attn": L.logical_attention(cfg, L.attn_shard_mode(cfg, rules)),
+            "ln2": (None,),
+            "mlp": L.logical_mlp(cfg),
+        },
+        "adapters": (None, "d", "tp"),
+        "final_norm": (None,),
+    }
+
+
+# -------------------------------------------------------------------- cache
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               rules: MeshRules = NO_MESH):
+    npts = num_shared_points(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    dtype = _dtype(cfg)
+    c = {
+        "mamba": mamba2.init_state(cfg, batch, cfg.num_layers, rules, dtype),
+        "k": jnp.zeros((npts, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((npts, batch, max_len, kv, hd), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+    from repro.models.sharding import kv_cache_axes
+    axes = kv_cache_axes(kv, hd, rules)
+    c["k"] = rules.constrain(c["k"], axes)
+    c["v"] = rules.constrain(c["v"], axes)
+    return c
+
+
+def cache_logical(cfg: ArchConfig, rules: MeshRules = NO_MESH) -> dict:
+    from repro.models.sharding import kv_cache_axes
+    axes = kv_cache_axes(cfg.num_kv_heads, cfg.hd, rules)
+    return {
+        "mamba": mamba2.state_logical(cfg),
+        "k": axes,
+        "v": axes,
+        "pos": ("batch", None),
+        "idx": (),
+    }
+
+
+def _shared_block(params, pt_idx, x, x0, cfg, *, q_pos, cache_k, cache_v,
+                  kv_pos, write_idx, rules, chunk):
+    """Apply the shared attention block at application point pt_idx.
+    cache_k/v: (B, S, kv, hd) slices or None (train). Returns
+    (x_new, k_new, v_new) where k/v are this segment's keys/values."""
+    sp = params["shared"]
+    adapter = params["adapters"][pt_idx]
+    h = jnp.einsum("btd,de->bte", jnp.concatenate([x, x0], axis=-1), adapter)
+    hn = L.rms_norm(h, sp["ln1"], cfg.norm_eps)
+    q, k, v = L.attention_qkv(sp["attn"], hn, cfg)
+    q = L.apply_rope(q, q_pos, cfg.rope_theta)
+    k = L.apply_rope(k, q_pos, cfg.rope_theta)
+    if cache_k is not None:
+        k_all = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, write_idx, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, write_idx, 0, 0))
+        kv_p = kv_pos
+    else:
+        k_all, v_all, kv_p = k, v, q_pos
+    o = L.chunked_attention(q, k_all, v_all, q_pos=q_pos, kv_pos=kv_p,
+                            causal=True, chunk=chunk, rules=rules)
+    h = h + L.attention_out(sp["attn"], o)
+    h = h + L.mlp(sp["mlp"], L.rms_norm(h, sp["ln2"], cfg.norm_eps), cfg)
+    if cache_k is not None:
+        return x + h, k_all, v_all
+    return x + h, k, v
+
+
+def forward(params, cfg: ArchConfig, tokens, *, cache=None, rules=NO_MESH,
+            ssm_chunk: int = 64, attn_chunk: int = 1024, remat: bool = True,
+            return_cache: bool = False, last_only: bool = False):
+    """Full-sequence forward; threads mamba states and (optionally) builds
+    the shared-attention KV caches for decode."""
+    b, t = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = rules.constrain(x, ("batch", None, None))
+    x0 = x
+    fresh = cache is None
+    if fresh:
+        cache = init_cache(cfg, b, t, rules)
+    idx = cache["idx"]
+    q_pos = idx[None, None] + jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[None, :], (b, t))
+    kv_pos = jax.lax.dynamic_update_slice(cache["pos"], q_pos, (0, idx))
+
+    every = cfg.shared_attn_every
+    npts = num_shared_points(cfg)
+    mstate = cache["mamba"]
+
+    def mamba_seg(x, lo: int, hi: int, remat_flag: bool):
+        """Scan mamba layers [lo, hi) with their states."""
+        seg_params = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        seg_state = jax.tree.map(lambda a: a[lo:hi], mstate)
+
+        def body(x, xs):
+            lp, st = xs
+            out, st_new = mamba2.block(lp, x, cfg, st, chunk=ssm_chunk,
+                                       rules=rules)
+            x = rules.constrain(x + out, ("batch", None, None))
+            return x, st_new
+
+        fn = jax.checkpoint(body) if remat_flag else body
+        x, seg_new = jax.lax.scan(fn, x, (seg_params, seg_state))
+        return x, seg_new
+
+    new_mamba_segs = []
+    k_new = cache["k"]
+    v_new = cache["v"]
+    for p in range(npts):
+        x, seg_state = mamba_seg(x, p * every, (p + 1) * every, remat)
+        new_mamba_segs.append(seg_state)
+        x, k_p, v_p = _shared_block(
+            params, p, x, x0, cfg, q_pos=q_pos,
+            cache_k=None if fresh and not return_cache else cache["k"][p],
+            cache_v=None if fresh and not return_cache else cache["v"][p],
+            kv_pos=kv_pos, write_idx=idx, rules=rules, chunk=attn_chunk,
+        )
+        if return_cache or not fresh:
+            k_new = k_new.at[p].set(k_p)
+            v_new = v_new.at[p].set(v_p)
+    if npts * every < cfg.num_layers:                    # trailing layers
+        x, seg_state = mamba_seg(x, npts * every, cfg.num_layers, remat)
+        new_mamba_segs.append(seg_state)
+
+    if last_only:
+        x = x[:, -1:]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    new_cache = {
+        "mamba": jax.tree.map(
+            lambda *segs: jnp.concatenate(segs, axis=0), *new_mamba_segs
+        ),
+        "k": k_new, "v": v_new,
+        "pos": kv_pos,
+        "idx": idx + t,
+    }
+    if return_cache:
+        return logits, new_cache
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg, tokens, max_len: int, *, rules=NO_MESH,
+            ssm_chunk=64, attn_chunk=1024):
+    b, t = tokens.shape
+    cache = init_cache(cfg, b, max_len, rules)
+    logits, cache = forward(
+        params, cfg, tokens, cache=cache, rules=rules, ssm_chunk=ssm_chunk,
+        attn_chunk=attn_chunk, remat=False, return_cache=True, last_only=True,
+    )
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, token, cache, *, rules=NO_MESH,
+                attn_chunk: int = 4096):
+    logits, cache = forward(
+        params, cfg, token[:, None], cache=cache, rules=rules, ssm_chunk=1,
+        attn_chunk=attn_chunk, remat=False, return_cache=True,
+    )
+    return logits[:, -1], cache

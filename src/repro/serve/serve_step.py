@@ -1,0 +1,91 @@
+"""Serve steps: prefill (prompt -> cache) and decode (one token against a
+full-length cache). These are the artifacts the decode_* / long_* dry-run
+cells lower; `generate` drives them for the runnable examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.models import whisper
+from repro.models.sharding import MeshRules, NO_MESH
+
+
+def make_decode_step(cfg: ArchConfig, rules: MeshRules = NO_MESH,
+                     chunk: int = 4096):
+    """(params, token, cache[, pos3]) -> (logits, new_cache)."""
+    def decode_step(params, token, cache, pos3=None):
+        return M.decode_step(params, cfg, token, cache, rules=rules,
+                             chunk=chunk, pos3=pos3)
+    return decode_step
+
+
+def make_prefill(cfg: ArchConfig, rules: MeshRules = NO_MESH,
+                 chunk: int = 1024, max_len: int | None = None):
+    mod = M.family_module(cfg)
+
+    def prefill(params, batch):
+        if cfg.is_encoder_decoder:
+            memory = whisper.encode(params, cfg, batch["frames"], rules=rules,
+                                    chunk=chunk, remat=False)
+            xk, xv = whisper.cross_kv(params, cfg, memory, rules=rules)
+            b = batch["frames"].shape[0]
+            cache = whisper.init_self_cache(cfg, b, cfg.max_decoder_len, rules)
+            logits, cache = whisper.decode(
+                params, cfg, batch["tokens"], xk=xk, xv=xv, self_cache=cache,
+                rules=rules, chunk=chunk, remat=False)
+            return logits[:, -1], {"self": cache, "xk": xk, "xv": xv}
+        tokens = batch["tokens"]
+        ml = max_len or tokens.shape[1] + 64
+        if cfg.ssm_kind == "rwkv6":
+            return mod.prefill(params, cfg, tokens, rules=rules)
+        if cfg.shared_attn_every:
+            return mod.prefill(params, cfg, tokens, ml, rules=rules,
+                               attn_chunk=chunk)
+        return mod.prefill(
+            params, cfg, tokens, ml, rules=rules, chunk=chunk,
+            pos3=batch.get("pos3"), vision_embeds=batch.get("vision_embeds"))
+    return prefill
+
+
+def make_whisper_decode_step(cfg: ArchConfig, rules: MeshRules = NO_MESH,
+                             chunk: int = 4096):
+    def decode_step(params, token, cache):
+        logits, self_new = whisper.decode(
+            params, cfg, token[:, None], xk=cache["xk"], xv=cache["xv"],
+            self_cache=cache["self"], rules=rules, chunk=chunk, remat=False)
+        return logits[:, 0], {"self": self_new, "xk": cache["xk"],
+                              "xv": cache["xv"]}
+    return decode_step
+
+
+def generate(params, cfg: ArchConfig, batch: dict, steps: int, *,
+             rules: MeshRules = NO_MESH, chunk: int = 1024,
+             temperature: float = 0.0, key=None):
+    """Greedy/sampled generation for the examples. Returns (B, steps)."""
+    prefill = make_prefill(cfg, rules, chunk=chunk,
+                           max_len=batch["tokens"].shape[1] + steps
+                           if "tokens" in batch else None)
+    logits, cache = prefill(params, batch)
+    if cfg.is_encoder_decoder:
+        step_fn = make_whisper_decode_step(cfg, rules, chunk)
+    else:
+        step_fn = make_decode_step(cfg, rules, chunk)
+    outs = []
+    b = logits.shape[0]
+    for i in range(steps):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            token = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            token = jnp.argmax(logits, axis=-1)
+        outs.append(token)
+        if cfg.mrope:
+            pos = batch["tokens"].shape[1] + i
+            pos3 = jnp.full((3, b, 1), pos, jnp.int32)
+            logits, cache = step_fn(params, token, cache, pos3)
+        else:
+            logits, cache = step_fn(params, token, cache)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,2 @@
+"""Training substrate: AdamW (Zero-sharded), gradient compression hooks,
+microbatched train step."""

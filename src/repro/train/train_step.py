@@ -1,0 +1,112 @@
+"""Microbatched, remat'd train step with sharded state.
+
+TrainState = {"params", "opt": {m, v}, "ef": error-feedback (optional),
+"step"}. The step function is built once per (arch x mesh) and jitted with
+in/out shardings derived from the logical trees — the same artifact the
+multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+import jax.numpy as _jnp
+from repro.models.sharding import MeshRules, NO_MESH, tree_constrain, tree_specs
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    microbatches: int = 1
+    remat: bool = True
+    attn_chunk: int = 1024
+    compress_grads: bool = False
+    opt_dtype: str = "float32"      # "bfloat16": half-size m/v (grok fit)
+
+
+def init_state(key, cfg: ArchConfig, tcfg: TrainConfig):
+    params = M.init_params(key, cfg)
+    od = _jnp.bfloat16 if tcfg.opt_dtype == "bfloat16" else _jnp.float32
+    state = {
+        "params": params,
+        "opt": opt.init_opt_state(params, od),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tcfg.compress_grads:
+        state["ef"] = opt.init_ef_state(params)
+    return state
+
+
+def state_logical(cfg: ArchConfig, tcfg: TrainConfig, rules: MeshRules):
+    lp = M.logical_params(cfg, rules)
+    s = {"params": lp, "opt": opt.opt_logical(lp), "step": ()}
+    if tcfg.compress_grads:
+        s["ef"] = lp
+    return s
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig,
+                    rules: MeshRules = NO_MESH):
+    logical_p = M.logical_params(cfg, rules)
+
+    def constrain_grads(grads):
+        # pin gradients to the parameter sharding: the data-axis reduction
+        # lowers to reduce-scatter into the FSDP shards instead of a full
+        # all-reduce of every weight gradient (see EXPERIMENTS.md Perf)
+        return tree_constrain(rules, grads, logical_p)
+
+    def loss_fn(params, batch):
+        return M.train_loss(params, cfg, batch, rules=rules,
+                            chunk=tcfg.attn_chunk, remat=tcfg.remat)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(tcfg.microbatches, b // tcfg.microbatches,
+                                 *x.shape[1:])
+            mb = {}
+            for k, v in batch.items():
+                if k == "pos3":
+                    mb[k] = jnp.moveaxis(
+                        v.reshape(3, tcfg.microbatches, -1, v.shape[-1]), 1, 0)
+                else:
+                    mb[k] = split(v)
+
+            def micro(acc, mbatch):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / tcfg.microbatches,
+                    acc, grads)
+                return acc, loss
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, zero, mb)
+            # constrain AFTER accumulation: one reduce-scatter for the whole
+            # step, not one per microbatch (8x the wire bytes — measured,
+            # see EXPERIMENTS.md Perf/grok iteration 3)
+            grads = constrain_grads(grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain_grads(grads)
+
+        new_state = dict(state)
+        if tcfg.compress_grads:
+            grads, new_state["ef"] = opt.compress_grads(grads, state["ef"])
+        new_params, new_opt, info = opt.adamw_update(
+            tcfg.adamw, params, grads, state["opt"], state["step"])
+        new_state.update(
+            params=new_params, opt=new_opt, step=state["step"] + 1)
+        metrics = {"loss": loss, **info}
+        return new_state, metrics
+
+    return train_step

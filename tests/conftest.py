@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py (and subprocess-based mesh
+# tests) force a host-platform device count.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,91 @@
+"""Bandwidth process + Fig. 2 ingress model properties."""
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.bandwidth import BandwidthProcess, IngressModel
+
+
+def test_static_process():
+    m = topology.uniform_matrix(4, 10.0)
+    p = BandwidthProcess(base=m, change_interval=None)
+    assert np.array_equal(p.matrix_at(0.0), m)
+    assert np.array_equal(p.matrix_at(123.4), m)
+    assert p.epoch_end(5.0) == np.inf
+
+
+@pytest.mark.parametrize("mode", ["jitter", "redraw", "markov"])
+def test_process_deterministic_and_epochwise(mode):
+    m = topology.heterogeneous_matrix(5, seed=1)
+    p = BandwidthProcess(base=m, change_interval=2.0, seed=7, mode=mode)
+    a = p.matrix_at(3.0)
+    b = p.matrix_at(3.9)      # same epoch
+    c = p.matrix_at(4.1)      # next epoch
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    # pure / history-free random access
+    p2 = BandwidthProcess(base=m, change_interval=2.0, seed=7, mode=mode)
+    assert np.array_equal(p2.matrix_at(3.5), a)
+    assert (a[~np.eye(5, dtype=bool)] >= p.min_bw).all()
+    assert (np.diag(a) == 0).all()
+
+
+def test_markov_correlation_decays():
+    m = topology.uniform_matrix(6, 20.0)
+    p = BandwidthProcess(base=m, change_interval=1.0, seed=3, mode="markov",
+                         rho=0.8, sigma=0.5)
+    mats = [np.log(p.matrix_at(t + 0.5)[0, 1] / 20.0) for t in range(400)]
+    x = np.array(mats)
+    r1 = np.corrcoef(x[:-1], x[1:])[0, 1]
+    r10 = np.corrcoef(x[:-10], x[10:])[0, 1]
+    assert r1 > 0.55            # one-epoch memory ~ rho
+    assert abs(r10) < r1 - 0.2  # decayed at lag 10
+
+
+def test_ingress_single_link_identity():
+    ing = IngressModel(seed=0)
+    bw = np.array([17.0])
+    assert np.array_equal(ing.effective_rates(bw, 0, 0), bw)
+
+
+def test_ingress_total_degrades_with_fanin():
+    """Fig. 2: total ingress throughput trends down as links increase."""
+    ing = IngressModel(seed=0)
+    totals = []
+    for m in range(1, 7):
+        bw = np.full(m, 50.0)
+        eff = ing.effective_rates(bw, 0, 0)
+        totals.append(eff.sum())
+    assert totals[0] == 50.0
+    # degraded cap: total factor decreases monotonically
+    for m in range(2, 7):
+        assert ing.total_factor(m) < ing.total_factor(m - 1) or \
+            ing.total_factor(m) == ing.floor
+    # and the realized split is uneven (Fig. 2)
+    eff6 = ing.effective_rates(np.full(6, 50.0), 0, 0)
+    assert eff6.max() > 2.0 * eff6.min()
+
+
+def test_ingress_persistent_shares():
+    ing = IngressModel(seed=0, persistent_shares=True)
+    a = ing.effective_rates(np.full(3, 30.0), receiver=2, epoch=0)
+    b = ing.effective_rates(np.full(3, 30.0), receiver=2, epoch=9)
+    assert np.array_equal(a, b)
+
+
+def test_duplex_penalty():
+    ing = IngressModel(seed=0)
+    rates = ing.node_allocations(
+        np.array([40.0, 40.0]), ("rx", "tx"), node=1, epoch=0)
+    assert (rates <= 40.0 * ing.duplex + 1e-9).all()
+    rates_rx = ing.node_allocations(
+        np.array([40.0]), ("rx",), node=1, epoch=0)
+    assert rates_rx[0] == 40.0
+
+
+def test_paper_matrices():
+    cl, bw = topology.aliyun_matrix()
+    assert bw.shape == (6, 6) and cl.name(0) == "Beijing"
+    assert bw[0, 1] == 59.669 and bw[5, 0] == 20.347
+    cl1, bw1 = topology.table1_matrix()
+    assert bw1[3, 2] == 20.0   # P3 -> P2, the paper's standout link

@@ -1,0 +1,109 @@
+"""BMFRepair (Algorithm 1): pruned DFS correctness + optimization laws."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.bmf import find_min_time_path, optimize_round, path_time
+from repro.core.plan import Round, Transfer
+
+
+def brute_force_best(src, dst, idle, bw, chunk):
+    """Oracle: enumerate every relay permutation of every subset."""
+    best = (src, dst)
+    best_t = path_time(best, bw, chunk)
+    for r in range(1, len(idle) + 1):
+        for subset in itertools.permutations(idle, r):
+            path = (src, *subset, dst)
+            t = path_time(path, bw, chunk)
+            if t < best_t:
+                best, best_t = path, t
+    return best, best_t
+
+
+@given(st.integers(0, 500), st.integers(4, 7))
+@settings(max_examples=60, deadline=None)
+def test_dfs_matches_bruteforce(seed, n):
+    bw = topology.heterogeneous_matrix(n, low=1, high=30, seed=seed)
+    idle = list(range(2, n))
+    want_path, want_t = brute_force_best(0, 1, idle, bw, 16.0)
+    got_path, got_t = find_min_time_path(0, 1, idle, bw, 16.0, bound=np.inf)
+    assert abs(got_t - want_t) < 1e-9
+    assert abs(path_time(got_path, bw, 16.0) - want_t) < 1e-9
+
+
+def test_paper_table1_example():
+    """Paper section IV.A: with Table I bandwidths, chunk 20M, the P1->D3
+    transfer (20/4 = 5s) reroutes through P2: P1->P2->D3 (20/6 + 20/10 =
+    5.33s... the paper's narrative uses 2s+2s hops; with the Table I matrix
+    the direct path is the optimum unless relays beat it — verify the
+    search returns whichever is cheaper)."""
+    _, bw = topology.table1_matrix()          # nodes D3,P1,P2,P3 = 0,1,2,3
+    path, t = find_min_time_path(1, 0, [2, 3], bw, 20.0, bound=np.inf)
+    want_path, want_t = brute_force_best(1, 0, [2, 3], bw, 20.0)
+    assert abs(t - want_t) < 1e-9
+    assert t <= 20.0 / bw[1, 0] + 1e-9        # never worse than direct
+
+
+def test_pruning_bound_short_circuits():
+    """With bound <= best possible, search returns the direct path."""
+    bw = topology.uniform_matrix(5, 10.0)
+    path, t = find_min_time_path(0, 1, [2, 3, 4], bw, 10.0, bound=0.5)
+    assert path == (0, 1)
+
+
+def _round(pairs, terms_start=0):
+    return Round(transfers=[
+        Transfer(src=s, dst=d, job=0, terms=frozenset({s}))
+        for s, d in pairs
+    ])
+
+
+@given(st.integers(0, 300))
+@settings(max_examples=40, deadline=None)
+def test_optimize_never_increases_round_time(seed):
+    n = 8
+    bw = topology.heterogeneous_matrix(n, low=1, high=40, seed=seed)
+    rnd = _round([(1, 0), (3, 2)])
+    idle = [4, 5, 6, 7]
+    new_rnd, stats = optimize_round(rnd, bw, idle, 16.0)
+    before = max(path_time(t.path, bw, 16.0) for t in rnd.transfers)
+    after = max(path_time(t.path, bw, 16.0) for t in new_rnd.transfers)
+    assert after <= before + 1e-9
+    # relays unique across the round and disjoint from endpoints
+    used = []
+    for t in new_rnd.transfers:
+        used.extend(t.relays)
+    assert len(used) == len(set(used))
+    assert not (set(used) & {0, 1, 2, 3})
+
+
+@given(st.integers(0, 200))
+@settings(max_examples=30, deadline=None)
+def test_optimize_all_at_least_as_good(seed):
+    n = 9
+    bw = topology.heterogeneous_matrix(n, low=1, high=40, seed=seed)
+    rnd = _round([(1, 0), (3, 2), (5, 4)])
+    idle = [6, 7, 8]
+    base, _ = optimize_round(rnd, bw, idle, 16.0)
+    ext, _ = optimize_round(rnd, bw, idle, 16.0, optimize_all=True)
+    total_base = sum(path_time(t.path, bw, 16.0) for t in base.transfers)
+    total_ext = sum(path_time(t.path, bw, 16.0) for t in ext.transfers)
+    assert total_ext <= total_base + 1e-9
+
+
+def test_bmf_stats_report_savings():
+    bw = np.array([
+        [0, 1, 20, 20],
+        [1, 0, 20, 20],
+        [20, 20, 0, 20],
+        [20, 20, 20, 0.0],
+    ])
+    rnd = _round([(0, 1)])
+    new_rnd, stats = optimize_round(rnd, bw, [2, 3], 20.0)
+    # direct 0->1 takes 20s; 0->2->1 takes 2s
+    assert stats.improved_links == 1
+    assert new_rnd.transfers[0].path in ((0, 2, 1), (0, 3, 1))
+    assert stats.time_saved > 15.0

@@ -1,0 +1,84 @@
+"""Reduced-mesh dry-run smoke: lower+compile reduced configs on a (2,2,2)
+pod/data/model mesh in a subprocess with 8 host devices. Exercises the same
+code path as launch/dryrun.py without the 512-device compile cost."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_TEMPLATE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_test_mesh
+from repro.models import model as M
+from repro.models.sharding import MeshRules, tree_shardings
+from repro.serve import serve_step as S
+from repro.train import train_step as T
+from repro.train.optimizer import AdamWConfig
+
+arch = {arch!r}
+kind = {kind!r}
+cfg = get_arch(arch).reduced()
+mesh = make_test_mesh(multi_pod=True, data=2, model=2)
+rules = MeshRules(mesh=mesh, fsdp=("pod", "data"), tensor="model")
+key = jax.random.PRNGKey(0)
+
+if kind == "train":
+    shape = ShapeConfig("t", "train", 16, 8)
+    tcfg = T.TrainConfig(adamw=AdamWConfig(), microbatches=2, attn_chunk=8)
+    state_struct = jax.eval_shape(lambda: T.init_state(key, cfg, tcfg))
+    state_sh = tree_shardings(rules, state_struct,
+                              T.state_logical(cfg, tcfg, rules))
+    batch_struct = M.input_specs(cfg, shape)
+    batch_sh = tree_shardings(rules, batch_struct, M.batch_logical(cfg, shape))
+    step = T.make_train_step(cfg, tcfg, rules)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                          out_shardings=(state_sh, None)).lower(
+            state_struct, batch_struct)
+        compiled = lowered.compile()
+else:
+    shape = ShapeConfig("d", "decode", 32, 8)
+    params_struct = jax.eval_shape(lambda: M.init_params(key, cfg))
+    params_sh = tree_shardings(rules, params_struct,
+                               M.logical_params(cfg, rules))
+    cache_struct = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len, rules))
+    cache_sh = tree_shardings(rules, cache_struct, M.cache_logical(cfg))
+    step_fn = S.make_decode_step(cfg, rules, 16)
+    token = jax.ShapeDtypeStruct((shape.global_batch,), jax.numpy.int32)
+    with mesh:
+        lowered = jax.jit(step_fn, in_shardings=(params_sh, None, cache_sh)
+                          ).lower(params_struct, token, cache_struct)
+        compiled = lowered.compile()
+ma = compiled.memory_analysis()
+assert compiled.as_text()
+print("OK", arch, kind, ma.temp_size_in_bytes)
+"""
+
+
+def _run(arch, kind):
+    code = _TEMPLATE.format(arch=arch, kind=kind)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=".", timeout=420)
+    assert out.returncode == 0, (arch, kind, out.stderr[-3000:])
+    assert "OK" in out.stdout
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen2_15b", "grok1_314b", "smollm_360m", "gemma3_4b", "whisper_medium",
+    "rwkv6_16b", "zamba2_7b", "qwen2vl_2b",
+])
+def test_reduced_train_lowers_on_multipod_mesh(arch):
+    _run(arch, "train")
+
+
+@pytest.mark.parametrize("arch", ["qwen2_15b", "rwkv6_16b", "zamba2_7b"])
+def test_reduced_decode_lowers_on_multipod_mesh(arch):
+    _run(arch, "decode")

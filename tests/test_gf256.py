@@ -1,0 +1,99 @@
+"""GF(256) field axioms (hypothesis) + table cross-checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ec import gf256
+
+elem = st.integers(0, 255)
+nz = st.integers(1, 255)
+
+
+@given(elem, elem)
+@settings(max_examples=80)
+def test_mul_matches_peasant(a, b):
+    assert int(gf256.gf_mul(a, b)) == gf256.gf_mul_slow(a, b)
+
+
+@given(elem, elem)
+@settings(max_examples=50)
+def test_commutative(a, b):
+    assert int(gf256.gf_mul(a, b)) == int(gf256.gf_mul(b, a))
+
+
+@given(elem, elem, elem)
+@settings(max_examples=50)
+def test_associative(a, b, c):
+    ab_c = gf256.gf_mul(gf256.gf_mul(a, b), c)
+    a_bc = gf256.gf_mul(a, gf256.gf_mul(b, c))
+    assert int(ab_c) == int(a_bc)
+
+
+@given(elem, elem, elem)
+@settings(max_examples=50)
+def test_distributive(a, b, c):
+    left = gf256.gf_mul(a, b ^ c)
+    right = int(gf256.gf_mul(a, b)) ^ int(gf256.gf_mul(a, c))
+    assert int(left) == right
+
+
+@given(nz)
+@settings(max_examples=60)
+def test_inverse(a):
+    assert int(gf256.gf_mul(a, gf256.gf_inv(a))) == 1
+
+
+@given(elem)
+def test_identities(a):
+    assert int(gf256.gf_mul(a, 1)) == a
+    assert int(gf256.gf_mul(a, 0)) == 0
+
+
+@given(nz, st.integers(0, 8))
+@settings(max_examples=40)
+def test_pow(a, n):
+    want = 1
+    for _ in range(n):
+        want = gf256.gf_mul_slow(want, a)
+    assert gf256.gf_pow(a, n) == want
+
+
+def test_exp_log_roundtrip():
+    for a in range(1, 256):
+        assert gf256.EXP_TABLE[gf256.LOG_TABLE[a]] == a
+
+
+@given(nz)
+@settings(max_examples=40)
+def test_mul_bitmatrix_semantics(c):
+    """out_bit[i] = XOR_j M[i,j] & in_bit[j]  must equal table multiply."""
+    m = gf256.mul_bitmatrix(c)
+    for x in (1, 2, 37, 128, 200, 255):
+        bits_in = [(x >> j) & 1 for j in range(8)]
+        out = 0
+        for i in range(8):
+            bit = 0
+            for j in range(8):
+                bit ^= m[i, j] & bits_in[j]
+            out |= bit << i
+        assert out == gf256.gf_mul_slow(c, x)
+
+
+def test_matrix_inverse_roundtrip(rng):
+    from repro.ec.gf256 import gf_mat_inv, MUL_TABLE
+    for n in (2, 3, 5):
+        while True:
+            m = rng.integers(0, 256, size=(n, n)).astype(np.uint8)
+            try:
+                inv = gf_mat_inv(m)
+                break
+            except np.linalg.LinAlgError:
+                continue
+        prod = np.zeros((n, n), dtype=np.uint8)
+        for i in range(n):
+            for j in range(n):
+                acc = 0
+                for k in range(n):
+                    acc ^= MUL_TABLE[m[i, k], inv[k, j]]
+                prod[i, j] = acc
+        assert np.array_equal(prod, np.eye(n, dtype=np.uint8))

@@ -1,0 +1,65 @@
+"""Paper Table II reproduction + MSRepair scheduling properties."""
+from repro.core.msrepair import plan_mppr, plan_msrepair, plan_random
+from repro.core.plan import Job, validate_plan
+
+# Paper's RS(7,4) scenario (1-indexed n1..n7 -> 0-indexed): failed {n1,n2},
+# helpers R^1 = {n3,n4,n5,n6}, R^2 = {n4,n5,n6,n7}.
+JOBS = [
+    Job(job_id=0, failed_node=0, requestor=0, helpers=(2, 3, 4, 5)),
+    Job(job_id=1, failed_node=1, requestor=1, helpers=(3, 4, 5, 6)),
+]
+
+
+def test_table2_msrepair_three_timestamps():
+    plan = plan_msrepair(JOBS)
+    validate_plan(plan)
+    assert plan.num_rounds == 3        # paper Table II
+
+
+def test_table2_mppr_six_timestamps():
+    plan = plan_mppr(JOBS)
+    validate_plan(plan)
+    assert plan.num_rounds == 6        # paper Table II
+
+
+def test_table2_random_between():
+    """Paper's random schedule takes 4; any seed must land in [3, 6]."""
+    for seed in range(12):
+        plan = plan_random(JOBS, seed=seed)
+        validate_plan(plan)
+        assert 3 <= plan.num_rounds <= 8
+
+
+def test_msrepair_reduction_percentages():
+    """Paper: MSRepair cuts timestamps 50% vs m-PPR, 25% vs random (Table
+    II: 3 vs 6 vs 4)."""
+    ms = plan_msrepair(JOBS).num_rounds
+    mp = plan_mppr(JOBS).num_rounds
+    assert 1 - ms / mp >= 0.49
+
+
+def test_priority_respected_in_round1():
+    """Round 1 must contain {R,R} merges before any {R,RP} delivery; the
+    paper's ts1 has two R-merges + one NR->RP delivery."""
+    plan = plan_msrepair(JOBS)
+    r_set = {3, 4, 5}
+    nr_set = {2, 6}
+    kinds = []
+    for t in plan.rounds[0].transfers:
+        src_cls = "R" if t.src in r_set else "NR"
+        dst_cls = ("RP" if t.dst in (0, 1) else
+                   "R" if t.dst in r_set else "NR")
+        kinds.append((src_cls, dst_cls))
+    assert ("R", "R") in kinds
+    assert ("NR", "RP") in kinds
+    assert ("NR", "R") not in kinds    # lowest priority never needed here
+
+
+def test_rs63_multi_node_counts():
+    """Paper Fig. 5: RS(6,3) two failures — m-PPR 4 ts, MSRepair 3 ts."""
+    jobs = [
+        Job(job_id=0, failed_node=0, requestor=0, helpers=(2, 3, 4)),
+        Job(job_id=1, failed_node=1, requestor=1, helpers=(3, 4, 5)),
+    ]
+    assert plan_mppr(jobs).num_rounds == 4
+    assert plan_msrepair(jobs).num_rounds == 3

@@ -1,0 +1,94 @@
+"""Round-structure planners: PPR, traditional, m-PPR, random, MSRepair."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.msrepair import (
+    node_sets, plan_mppr, plan_msrepair, plan_random, select_helpers_multi)
+from repro.core.plan import Job, validate_plan
+from repro.core.ppr import plan_ppr, plan_traditional
+
+
+def _job(n, k, failed=0):
+    helpers = tuple(x for x in range(n) if x != failed)[:k]
+    return Job(job_id=0, failed_node=failed, requestor=failed, helpers=helpers)
+
+
+@pytest.mark.parametrize("n,k", [(4, 2), (6, 3), (7, 4), (6, 4), (4, 3),
+                                 (9, 6), (12, 8)])
+def test_ppr_round_count(n, k):
+    plan = plan_ppr(_job(n, k))
+    assert plan.num_rounds == math.ceil(math.log2(k + 1))
+    validate_plan(plan)
+
+
+def test_ppr_matches_paper_rs63():
+    """Paper Fig. 4: ts1: D2->D1, P1->D3; ts2: D3->D1 (0-indexed 1->0, 3->2,
+    then 2->0)."""
+    plan = plan_ppr(_job(6, 3))
+    r1 = {(t.src, t.dst) for t in plan.rounds[0].transfers}
+    r2 = {(t.src, t.dst) for t in plan.rounds[1].transfers}
+    assert r1 == {(1, 0), (3, 2)}
+    assert r2 == {(2, 0)}
+
+
+def test_traditional_star():
+    plan = plan_traditional(_job(6, 3))
+    assert plan.num_rounds == 1
+    assert len(plan.rounds[0].transfers) == 3
+    validate_plan(plan, max_recv_per_round=3)
+
+
+@st.composite
+def multi_scenario(draw):
+    k = draw(st.integers(2, 5))
+    n = draw(st.integers(k + 2, min(k + 5, 10)))
+    nf = draw(st.integers(2, min(3, n - k)))
+    return n, k, nf
+
+
+def _jobs(n, k, nf):
+    failed = list(range(nf))
+    helper_sets = select_helpers_multi(n, k, failed)
+    return [Job(job_id=i, failed_node=f, requestor=f, helpers=helper_sets[i])
+            for i, f in enumerate(failed)]
+
+
+@given(multi_scenario())
+@settings(max_examples=40, deadline=None)
+def test_all_multi_planners_valid(sc):
+    n, k, nf = sc
+    jobs = _jobs(n, k, nf)
+    for plan in (plan_msrepair(jobs), plan_mppr(jobs),
+                 plan_random(jobs, seed=1)):
+        validate_plan(plan)
+
+
+@given(multi_scenario())
+@settings(max_examples=30, deadline=None)
+def test_msrepair_no_more_rounds_than_mppr(sc):
+    n, k, nf = sc
+    jobs = _jobs(n, k, nf)
+    assert plan_msrepair(jobs).num_rounds <= plan_mppr(jobs).num_rounds
+
+
+def test_helper_selection_maximizes_nr():
+    """Paper: spread helper sets to maximize |NR| (RS(7,4), 2 failures:
+    5 survivors, forced overlap 3, |NR| max = 2)."""
+    hs = select_helpers_multi(7, 4, [0, 1])
+    jobs = [Job(0, 0, 0, hs[0]), Job(1, 1, 1, hs[1])]
+    r, nr, rp = node_sets(jobs)
+    assert len(nr) == 2 and len(r) == 3
+    # with >= 2k survivors the sets are disjoint (NR maximal, R empty)
+    hs = select_helpers_multi(10, 3, [0, 1])
+    assert not (set(hs[0]) & set(hs[1]))
+
+
+def test_mppr_serializes_jobs():
+    jobs = _jobs(6, 3, 2)
+    plan = plan_mppr(jobs)
+    # first half of the rounds only touches job 0, second half job 1
+    half = plan.num_rounds // 2
+    assert all(t.job == 0 for r in plan.rounds[:half] for t in r.transfers)
+    assert all(t.job == 1 for r in plan.rounds[half:] for t in r.transfers)

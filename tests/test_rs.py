@@ -1,0 +1,61 @@
+"""RS(n,k) MDS property: any <= n-k erasures decode (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.ec.rs import RSCode, generator_matrix
+
+
+@st.composite
+def rs_scenario(draw):
+    k = draw(st.integers(2, 6))
+    n = draw(st.integers(k + 1, min(k + 4, 10)))
+    f = draw(st.integers(1, n - k))
+    failed = draw(st.permutations(range(n)))[:f]
+    seed = draw(st.integers(0, 2**16))
+    return n, k, sorted(failed), seed
+
+
+@given(rs_scenario())
+@settings(max_examples=60, deadline=None)
+def test_any_erasure_pattern_decodes(sc):
+    n, k, failed, seed = sc
+    rng = np.random.default_rng(seed)
+    code = RSCode(n, k)
+    data = rng.integers(0, 256, size=(k, 96), dtype=np.uint8)
+    cw = code.encode(data)
+    helpers = [i for i in range(n) if i not in failed][:k]
+    rec = code.reconstruct(failed, helpers, cw[helpers])
+    assert np.array_equal(rec, cw[failed])
+
+
+@given(rs_scenario())
+@settings(max_examples=30, deadline=None)
+def test_decode_all_recovers_data(sc):
+    n, k, failed, seed = sc
+    rng = np.random.default_rng(seed)
+    code = RSCode(n, k)
+    data = rng.integers(0, 256, size=(k, 64), dtype=np.uint8)
+    cw = code.encode(data)
+    present = {i: cw[i] for i in range(n) if i not in failed}
+    rec = code.decode_all(present)
+    assert np.array_equal(rec, data)
+
+
+def test_generator_systematic():
+    for n, k in [(4, 2), (6, 3), (7, 4), (6, 4), (4, 3), (9, 6)]:
+        g = generator_matrix(n, k)
+        assert np.array_equal(g[:k], np.eye(k, dtype=np.uint8))
+
+
+def test_repair_coeffs_validate_helpers():
+    code = RSCode(6, 3)
+    try:
+        code.repair_coeffs((0,), (1, 2))
+        assert False, "should require k helpers"
+    except ValueError:
+        pass
+    try:
+        code.repair_coeffs((0,), (0, 1, 2))
+        assert False, "helpers cannot include failed"
+    except ValueError:
+        pass

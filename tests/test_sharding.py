@@ -1,0 +1,42 @@
+"""MeshRules logical->PartitionSpec translation (subprocess mesh)."""
+import subprocess
+import sys
+import textwrap
+
+
+def test_spec_translation_rules():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, "src")
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.models.sharding import MeshRules
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        r = MeshRules(mesh=mesh, fsdp=("pod", "data"), tensor="model")
+        # divisible dims shard
+        assert r.spec(("d", "tp"), (8, 4)) == P(("pod", "data"), "model")
+        # non-divisible dims replicate (smollm 15-heads case)
+        assert r.spec(("d", "tp"), (8, 15)) == P(("pod", "data"), None)
+        assert r.spec(("d", "tp"), (9, 4)) == P(None, "model")
+        # batch/seq aliases
+        assert r.spec(("batch", None, "seq"), (8, 3, 16)) == \\
+            P(("pod", "data"), None, "model")
+        # an axis is used at most once per spec
+        assert r.spec(("tp", "tp"), (4, 4)) == P("model", None)
+        # scalars
+        assert r.spec((), ()) == P()
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=".")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_no_mesh_rules_are_noop():
+    from repro.models.sharding import NO_MESH
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert NO_MESH.constrain(x, ("batch", None)) is x

@@ -1,0 +1,109 @@
+"""Event-driven simulator: determinism, churn integration, scheme laws."""
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.bandwidth import BandwidthProcess, IngressModel
+from repro.core.simulator import (RepairSimulator, Scenario, execute_round)
+from repro.core.plan import Transfer
+from repro.ec.rs import RSCode
+
+
+def _scenario(n=6, k=3, failed=(0,), seed=0, interval=2.0, chunk=16.0,
+              cluster=None, mode="markov"):
+    cluster = cluster or n
+    m = topology.heterogeneous_matrix(cluster, low=3, high=30, seed=seed)
+    bwp = BandwidthProcess(base=m, change_interval=interval, seed=seed,
+                           mode=mode)
+    return Scenario(num_nodes=cluster, code=RSCode(n, k), failed=failed,
+                    bw=bwp, ingress=IngressModel(seed=seed), chunk_mb=chunk)
+
+
+def test_deterministic():
+    sc = _scenario()
+    a = RepairSimulator(sc).run("bmf")
+    b = RepairSimulator(sc).run("bmf")
+    assert a.total_time == b.total_time
+    assert a.round_times == b.round_times
+
+
+def test_single_transfer_static_time_analytic():
+    m = topology.uniform_matrix(3, 8.0)
+    bwp = BandwidthProcess(base=m, change_interval=None)
+    t = execute_round([Transfer(src=1, dst=0, job=0, terms=frozenset({1}))],
+                      0.0, bwp, IngressModel(), 16.0)
+    assert abs(t - 2.0) < 1e-6            # 16 MB / 8 MBps
+
+
+def test_churn_integration_analytic():
+    """Piecewise bandwidth 4 then 16 MBps, epoch 2 s, chunk 16 MB:
+    8 MB in the first epoch, remaining 8 MB at 16 MBps -> 2.5 s."""
+    base = topology.uniform_matrix(3, 4.0)
+
+    class TwoEpoch(BandwidthProcess):
+        def matrix_at(self, t):
+            m = self.base.copy()
+            if self.epoch_of(t) >= 1:
+                m = m * 4.0
+            np.fill_diagonal(m, 0.0)
+            return m
+
+    bwp = TwoEpoch(base=base, change_interval=2.0, jitter=0.0)
+    t = execute_round([Transfer(src=1, dst=0, job=0, terms=frozenset({1}))],
+                      0.0, bwp, IngressModel(), 16.0)
+    assert abs(t - 2.5) < 1e-6
+
+
+def test_relay_store_and_forward_sums_hops():
+    m = topology.uniform_matrix(4, 8.0)
+    bwp = BandwidthProcess(base=m, change_interval=None)
+    tr = Transfer(src=1, dst=0, job=0, terms=frozenset({1}), path=(1, 2, 0))
+    t = execute_round([tr], 0.0, bwp, IngressModel(), 16.0)
+    assert abs(t - 4.0) < 1e-6            # 2 + 2 s (paper's sum-of-hops)
+
+
+def test_static_bmf_never_worse_than_ppr():
+    for seed in range(15):
+        sc = _scenario(seed=seed, interval=None)
+        sim = RepairSimulator(sc)
+        assert (sim.run("bmf").total_time
+                <= sim.run("ppr").total_time + 1e-9)
+
+
+def test_all_schemes_complete_and_are_positive():
+    sc = _scenario(n=7, k=4, cluster=10)
+    sim = RepairSimulator(sc)
+    for scheme in ("traditional", "ppr", "bmf", "ppt"):
+        r = sim.run(scheme)
+        assert r.total_time > 0 and np.isfinite(r.total_time)
+    sc2 = _scenario(n=7, k=4, failed=(0, 1), cluster=10)
+    sim2 = RepairSimulator(sc2)
+    for scheme in ("mppr", "random", "msrepair"):
+        r = sim2.run(scheme)
+        assert r.total_time > 0 and np.isfinite(r.total_time)
+
+
+def test_planning_time_fraction_small():
+    """Paper Fig. 8: algorithm overhead ~3% of repair time."""
+    sc = _scenario(n=7, k=4, cluster=14, chunk=32.0)
+    r = RepairSimulator(sc).run("bmf")
+    assert r.planning_time < 0.25 * r.total_time
+
+
+def test_msrepair_beats_mppr_on_average():
+    gains = []
+    for seed in range(15):
+        sc = _scenario(n=7, k=4, failed=(0, 1), seed=seed, cluster=10)
+        sim = RepairSimulator(sc)
+        gains.append(sim.run("mppr").total_time
+                     - sim.run("msrepair").total_time)
+    assert np.mean(gains) > 0
+
+
+def test_bmf_beats_ppr_on_average_under_churn():
+    gains = []
+    for seed in range(15):
+        sc = _scenario(seed=seed, cluster=10)
+        sim = RepairSimulator(sc)
+        gains.append(sim.run("ppr").total_time - sim.run("bmf").total_time)
+    assert np.mean(gains) > 0

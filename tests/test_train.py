@@ -1,0 +1,82 @@
+"""Training substrate: learning happens, microbatching is consistent,
+gradient compression's error feedback behaves."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import SyntheticStream
+from repro.train.optimizer import (AdamWConfig, compress_grads,
+                                   init_ef_state, lr_at)
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+CFG = get_arch("smollm_360m").reduced()
+SHAPE = ShapeConfig("t", "train", 32, 8)
+
+
+def _run(tcfg, steps=25, seed=0):
+    state = init_state(jax.random.PRNGKey(seed), CFG, tcfg)
+    step = jax.jit(make_train_step(CFG, tcfg))
+    stream = SyntheticStream(CFG, SHAPE)
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return losses, state
+
+
+def test_loss_decreases():
+    tcfg = TrainConfig(adamw=AdamWConfig(peak_lr=1e-2, warmup_steps=5),
+                       attn_chunk=16)
+    losses, _ = _run(tcfg, steps=30)
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_microbatch_equivalence():
+    """mb=1 and mb=2 average the same gradients -> nearly equal loss path."""
+    t1 = TrainConfig(adamw=AdamWConfig(peak_lr=5e-3, warmup_steps=5),
+                     microbatches=1, attn_chunk=16)
+    t2 = TrainConfig(adamw=AdamWConfig(peak_lr=5e-3, warmup_steps=5),
+                     microbatches=2, attn_chunk=16)
+    l1, s1 = _run(t1, steps=8)
+    l2, s2 = _run(t2, steps=8)
+    assert abs(l1[-1] - l2[-1]) < 0.05
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        assert float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32)))) < 0.05
+
+
+def test_compressed_grads_still_learn():
+    tcfg = TrainConfig(adamw=AdamWConfig(peak_lr=1e-2, warmup_steps=5),
+                       attn_chunk=16, compress_grads=True)
+    losses, _ = _run(tcfg, steps=30)
+    assert losses[-1] < losses[0] - 0.25
+
+
+def test_error_feedback_accumulates_residual():
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 64), jnp.float32)}
+    ef = init_ef_state(g)
+    gq, ef2 = compress_grads(g, ef)
+    # dequantized + residual == original (exact identity of EF)
+    recon = gq["w"].astype(jnp.float32) + ef2["w"]
+    assert float(jnp.max(jnp.abs(recon - g["w"]))) < 1e-6
+    # int8 grid: quantization error bounded by scale
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(gq["w"] - g["w"]))) <= scale + 1e-7
+
+
+def test_lr_schedule():
+    cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_at(cfg, jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr_at(cfg, jnp.asarray(100))) < 2e-4
+
+
+def test_grad_clipping_bounds_update():
+    tcfg = TrainConfig(adamw=AdamWConfig(peak_lr=1e-2, warmup_steps=1,
+                                         grad_clip=0.1), attn_chunk=16)
+    _, state = _run(tcfg, steps=3)
+    assert int(state["step"]) == 3
