@@ -2,27 +2,49 @@
 
 Paper claims: MSRepair cuts 21.3% (RS(4,2)), 46.5% (RS(6,3)), 59.7%
 (RS(7,4)) vs m-PPR; random ~ MSRepair at RS(4,2) (tiny NR set).
+
+Declarative: one `GridSuite` over the three codes x 20 trials, executed
+by a single `run_sweep` invocation.
 """
-from benchmarks.common import Row, mininet_scenario, reduction, run_trials
+from benchmarks.common import (BENCH_EXECUTOR, TRIALS, Row, mininet_scenario,
+                               reduction)
+from repro.sim.suite import GridSuite
+from repro.sim.sweep import run_sweep
 
 SCHEMES = ("mppr", "random", "msrepair")
+CODES = [(4, 2), (6, 3), (7, 4)]
+
+
+def fig10_suite(trials=TRIALS) -> GridSuite:
+    return GridSuite(
+        "fig10",
+        axes={"code": CODES},
+        build=lambda p, seed: mininet_scenario(
+            *p["code"], (0, 1), chunk_mb=32, seed=seed),
+        trials=trials,
+        schemes=SCHEMES,
+    )
 
 
 def run() -> list[Row]:
+    sweep = run_sweep(fig10_suite(), executor=BENCH_EXECUTOR)
+    groups = sweep.group_by("code")
     rows = []
-    for (n, k) in [(4, 2), (6, 3), (7, 4)]:
-        res = run_trials(
-            lambda seed: mininet_scenario(n, k, (0, 1), chunk_mb=32,
-                                          seed=seed),
-            SCHEMES)
-        t_m, _, _ = res["mppr"]
-        t_r, _, _ = res["random"]
-        t_s, _, plan_s = res["msrepair"]
+    for (n, k) in CODES:
+        cell = groups[((n, k),)]
+        t_m = cell.stats("mppr").mean
+        t_r = cell.stats("random").mean
+        ms = cell.stats("msrepair")
         rows.append(Row(
             f"fig10/rs{n}{k}/32MB",
-            plan_s * 1e6,
-            f"mppr={t_m:.2f}s random={t_r:.2f}s msrepair={t_s:.2f}s "
-            f"ms_vs_mppr=-{reduction(t_m, t_s):.1f}% "
-            f"ms_vs_random=-{reduction(t_r, t_s):.1f}%",
+            ms.mean_planning * 1e6,
+            f"mppr={t_m:.2f}s random={t_r:.2f}s msrepair={ms.mean:.2f}s "
+            f"ms_vs_mppr=-{reduction(t_m, ms.mean):.1f}% "
+            f"ms_vs_random=-{reduction(t_r, ms.mean):.1f}%",
         ))
+    rows.append(Row(
+        "fig10/summary", 0.0,
+        f"overall ms_vs_mppr=-{sweep.reduction_pct('mppr', 'msrepair'):.1f}% "
+        f"(paper: 21.3/46.5/59.7% by code)",
+    ))
     return rows

@@ -3,29 +3,48 @@ churn, RS(4,2), chunks 8/16/32 MB.
 
 Paper claims: comparable at 8/16 MB low-churn; BMF ~25% lower at 32 MB
 hot; PPT fluctuates much more (plan-once + multi-link sensitivity).
-"""
-import numpy as np
 
-from benchmarks.common import Row, mininet_scenario, reduction, run_trials
+Declarative: one `GridSuite` over churn regime x chunk size x 20 trials,
+executed by a single `run_sweep` invocation; PPT's fluctuation shows up
+directly in the per-cell std ratio.
+"""
+from benchmarks.common import (BENCH_EXECUTOR, TRIALS, Row, mininet_scenario,
+                               reduction)
+from repro.sim.suite import GridSuite
+from repro.sim.sweep import run_sweep
 
 SCHEMES = ("bmf", "ppt")
+REGIMES = [("cold5s", 5.0), ("hot2s", 2.0)]
+CHUNKS_MB = [8, 16, 32]
+
+
+def fig11_suite(trials=TRIALS) -> GridSuite:
+    return GridSuite(
+        "fig11",
+        axes={"regime": REGIMES, "chunk_mb": CHUNKS_MB},
+        build=lambda p, seed: mininet_scenario(
+            4, 2, (0,), chunk_mb=p["chunk_mb"], seed=seed,
+            interval=p["regime"][1]),
+        trials=trials,
+        schemes=SCHEMES,
+    )
 
 
 def run() -> list[Row]:
+    sweep = run_sweep(fig11_suite(), executor=BENCH_EXECUTOR)
+    groups = sweep.group_by("regime", "chunk_mb")
     rows = []
-    for label, interval in (("cold5s", 5.0), ("hot2s", 2.0)):
-        for chunk in (8, 16, 32):
-            res = run_trials(
-                lambda seed: mininet_scenario(4, 2, (0,), chunk_mb=chunk,
-                                              seed=seed, interval=interval),
-                SCHEMES)
-            t_b, sd_b, plan_b = res["bmf"]
-            t_p, sd_p, _ = res["ppt"]
+    for regime in REGIMES:
+        for chunk in CHUNKS_MB:
+            cell = groups[(regime, chunk)]
+            bmf = cell.stats("bmf")
+            ppt = cell.stats("ppt")
             rows.append(Row(
-                f"fig11/{label}/chunk{chunk}MB",
-                plan_b * 1e6,
-                f"bmf={t_b:.2f}s(std{sd_b:.2f}) ppt={t_p:.2f}s(std{sd_p:.2f}) "
-                f"bmf_vs_ppt=-{reduction(t_p, t_b):.1f}% "
-                f"ppt_fluct_ratio={sd_p / max(sd_b, 1e-9):.1f}x",
+                f"fig11/{regime[0]}/chunk{chunk}MB",
+                bmf.mean_planning * 1e6,
+                f"bmf={bmf.mean:.2f}s(std{bmf.std:.2f}) "
+                f"ppt={ppt.mean:.2f}s(std{ppt.std:.2f}) "
+                f"bmf_vs_ppt=-{reduction(ppt.mean, bmf.mean):.1f}% "
+                f"ppt_fluct_ratio={ppt.std / max(bmf.std, 1e-9):.1f}x",
             ))
     return rows

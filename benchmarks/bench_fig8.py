@@ -1,27 +1,46 @@
 """Paper Fig. 8: fraction of repair time spent on coding + algorithm
 (everything except network transmission). Paper: ~3% — the pruned DFS is
 cheap, so BMFRepair scales to large networks.
+
+The simulation half is a declarative `GridSuite` (code x chunk, one seeded
+trial each, matching the legacy seed) run by one sweep invocation; the
+coding half times the real GF(256) kernels per cell.
 """
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, mininet_scenario, run_trials
-from repro.core import executor
-from repro.core.simulator import RepairSimulator
+from benchmarks.common import BENCH_EXECUTOR, Row, mininet_scenario
 from repro.ec.rs import RSCode
 from repro.kernels import ops
+from repro.sim.suite import GridSuite
+from repro.sim.sweep import run_sweep
+
+CODES = [(4, 2), (6, 3), (7, 4)]
+CHUNKS_MB = [8, 32]
+
+
+def fig8_suite() -> GridSuite:
+    return GridSuite(
+        "fig8",
+        axes={"code": CODES, "chunk_mb": CHUNKS_MB},
+        build=lambda p, seed: mininet_scenario(
+            *p["code"], (0,), chunk_mb=p["chunk_mb"], seed=seed),
+        trials=1,
+        schemes=("bmf",),
+        base_seed=3,
+    )
 
 
 def run() -> list[Row]:
     rows = []
     rng = np.random.default_rng(0)
-    for (n, k) in [(4, 2), (6, 3), (7, 4)]:
-        for chunk in (8, 32):
-            sc = mininet_scenario(n, k, (0,), chunk_mb=chunk, seed=3)
-            sim = RepairSimulator(sc)
-            r = sim.run("bmf")
+    sweep = run_sweep(fig8_suite(), executor=BENCH_EXECUTOR)
+    groups = sweep.group_by("code", "chunk_mb")
+    for (n, k) in CODES:
+        for chunk in CHUNKS_MB:
+            r = groups[((n, k), chunk)].cases[0].results["bmf"]
             # coding cost: premultiply k chunks + k-1 XOR merges, measured
             # on the real kernels (MB-sized buffers, interpret mode)
             code = RSCode(n, k)

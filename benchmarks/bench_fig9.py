@@ -3,28 +3,56 @@ traditional vs PPR vs BMFRepair for RS(4,2), RS(6,3), RS(7,4).
 
 Paper claims: BMF cuts ~23-25% vs PPR (up to 42.1%), up to 64.9% vs
 traditional; gains grow with n-k (more idle forwarders).
+
+Declarative: the whole figure is one `GridSuite` (3 codes x 3 chunk sizes
+x 20 trials = 180 scenarios per scheme) executed by a single `run_sweep`
+invocation; rows are per-cell summaries of the sweep result.
 """
-from benchmarks.common import Row, mininet_scenario, reduction, run_trials
+from benchmarks.common import (BENCH_EXECUTOR, TRIALS, Row, mininet_scenario,
+                               reduction)
+from repro.sim.suite import GridSuite
+from repro.sim.sweep import run_sweep
 
 SCHEMES = ("traditional", "ppr", "bmf")
+CODES = [(4, 2), (6, 3), (7, 4)]
+CHUNKS_MB = [8, 16, 32]
+
+
+def fig9_suite(trials=TRIALS) -> GridSuite:
+    return GridSuite(
+        "fig9",
+        axes={"code": CODES, "chunk_mb": CHUNKS_MB},
+        build=lambda p, seed: mininet_scenario(
+            *p["code"], (0,), chunk_mb=p["chunk_mb"], seed=seed),
+        trials=trials,
+        schemes=SCHEMES,
+    )
 
 
 def run() -> list[Row]:
+    sweep = run_sweep(fig9_suite(), executor=BENCH_EXECUTOR)
+    groups = sweep.group_by("code", "chunk_mb")
     rows = []
-    for (n, k) in [(4, 2), (6, 3), (7, 4)]:
-        for chunk in (8, 16, 32):
-            res = run_trials(
-                lambda seed: mininet_scenario(n, k, (0,), chunk_mb=chunk,
-                                              seed=seed),
-                SCHEMES)
-            t_t, _, _ = res["traditional"]
-            t_p, _, plan_p = res["ppr"]
-            t_b, _, plan_b = res["bmf"]
+    for (n, k) in CODES:
+        for chunk in CHUNKS_MB:
+            cell = groups[((n, k), chunk)]
+            t_t = cell.stats("traditional").mean
+            t_p = cell.stats("ppr").mean
+            bmf = cell.stats("bmf")
             rows.append(Row(
                 f"fig9/rs{n}{k}/chunk{chunk}MB",
-                plan_b * 1e6,
-                f"trad={t_t:.2f}s ppr={t_p:.2f}s bmf={t_b:.2f}s "
-                f"bmf_vs_ppr=-{reduction(t_p, t_b):.1f}% "
-                f"bmf_vs_trad=-{reduction(t_t, t_b):.1f}%",
+                bmf.mean_planning * 1e6,
+                f"trad={t_t:.2f}s ppr={t_p:.2f}s bmf={bmf.mean:.2f}s "
+                f"bmf_vs_ppr=-{reduction(t_p, bmf.mean):.1f}% "
+                f"bmf_vs_trad=-{reduction(t_t, bmf.mean):.1f}%",
             ))
+    rows.append(Row(
+        "fig9/summary", 0.0,
+        f"n={len(sweep)} scenarios/scheme; bmf_vs_ppr reduction="
+        f"-{sweep.reduction_pct('ppr', 'bmf'):.1f}% "
+        f"speedup p10={sweep.speedup_percentile('ppr', 'bmf', 10):.2f}x "
+        f"p50={sweep.speedup_percentile('ppr', 'bmf', 50):.2f}x "
+        f"p90={sweep.speedup_percentile('ppr', 'bmf', 90):.2f}x "
+        f"(paper: ~23-25%, max 42.1%)",
+    ))
     return rows

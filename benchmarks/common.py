@@ -3,22 +3,32 @@
 Every bench_* module exposes `run() -> list[Row]`; benchmarks.run prints
 them as `name,us_per_call,derived` CSV (us_per_call = mean planning/
 algorithm wall-time per repair; derived = the figure's headline metric).
+
+Since the sweep engine landed, each figure is a *declarative suite
+definition* (a `GridSuite`/`MonteCarloSuite` in its bench module) executed
+by one `repro.sim.sweep.run_sweep` call; this module keeps the scenario
+factories, the CSV row type, and a legacy-compatible `run_trials` wrapper.
+Set REPRO_SWEEP_EXECUTOR=serial|thread|process|auto to pick the dispatcher
+(default auto: a process pool on multi-core hosts).
 """
 from __future__ import annotations
 
 import dataclasses
-
-import numpy as np
+import os
 
 from repro.core import topology
 from repro.core.bandwidth import BandwidthProcess, IngressModel
-from repro.core.simulator import RepairSimulator, Scenario
+from repro.core.simulator import Scenario
 from repro.ec.rs import RSCode
+from repro.sim.suite import GridSuite
+from repro.sim.sweep import run_sweep
 
 # The paper's Mininet testbed: 14 hosts, heterogeneous links, hot churn 2 s
 MININET_HOSTS = 14
 BW_LOW, BW_HIGH = 3.0, 30.0
 TRIALS = 20                      # "We run each group of experiments over 20 times"
+
+BENCH_EXECUTOR = os.environ.get("REPRO_SWEEP_EXECUTOR", "auto")
 
 
 @dataclasses.dataclass
@@ -63,20 +73,28 @@ def aliyun_scenario(n, k, failed, *, chunk_mb, seed, interval=2.0):
                     bw=bwp, ingress=ingress, chunk_mb=chunk_mb)
 
 
+def trial_suite(name, make_scenario, schemes, trials=TRIALS) -> GridSuite:
+    """A suite of `trials` seeded repetitions of one scenario factory
+    (seed = trial index, the legacy serial-loop convention)."""
+    return GridSuite(
+        name, axes={}, build=lambda params, seed: make_scenario(seed),
+        trials=trials, schemes=schemes,
+    )
+
+
 def run_trials(make_scenario, schemes, trials=TRIALS):
-    """-> {scheme: (mean_time, std_time, mean_plan_seconds)}"""
-    times = {s: [] for s in schemes}
-    plans = {s: [] for s in schemes}
-    for seed in range(trials):
-        sc = make_scenario(seed)
-        sim = RepairSimulator(sc, random_seed=seed)
-        for s in schemes:
-            r = sim.run(s)
-            times[s].append(r.total_time)
-            plans[s].append(r.planning_time)
+    """-> {scheme: (mean_time, std_time, mean_plan_seconds)}
+
+    Legacy entry point, now a thin wrapper over the sweep engine: results
+    are identical to the old serial loop (same seeds, same scenarios),
+    but cases dispatch concurrently.
+    """
+    sweep = run_sweep(
+        trial_suite("trials", make_scenario, schemes, trials),
+        executor=BENCH_EXECUTOR,
+    )
     return {
-        s: (float(np.mean(times[s])), float(np.std(times[s])),
-            float(np.mean(plans[s])))
+        s: (sweep.stats(s).mean, sweep.stats(s).std, sweep.stats(s).mean_planning)
         for s in schemes
     }
 

@@ -1,0 +1,92 @@
+"""Docs link-and-snippet check.
+
+1. Executes every ```python code block in README.md top to bottom (shared
+   namespace), so the quickstart keeps running exactly as written.
+2. Verifies that every repo path (src/..., benchmarks/..., examples/...,
+   tests/..., docs/...) referenced in README.md and docs/*.md exists.
+3. Verifies that every dotted `repro.*` module reference resolves to a
+   real module file or package under src/.
+
+Run from the repo root (CI does):  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+
+PATH_RE = re.compile(
+    r"\b(?:src|benchmarks|examples|tests|docs)/[A-Za-z0-9_\-./*]*[A-Za-z0-9_*]"
+)
+MODULE_RE = re.compile(r"\brepro(?:\.[a-z0-9_]+)+\b")
+CODE_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def doc_files() -> list[Path]:
+    return [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def check_paths() -> list[str]:
+    errors = []
+    for doc in doc_files():
+        text = doc.read_text()
+        for ref in sorted(set(PATH_RE.findall(text))):
+            ref = ref.rstrip(".")
+            if "*" in ref:
+                if not any(ROOT.glob(ref)):
+                    errors.append(f"{doc.name}: glob {ref!r} matches nothing")
+            elif not (ROOT / ref).exists():
+                errors.append(f"{doc.name}: missing path {ref!r}")
+    return errors
+
+
+def module_resolves(dotted: str) -> bool:
+    """True if some prefix of `dotted` (>= 2 segments) is a module/package;
+    trailing segments are assumed to be attributes of it."""
+    parts = dotted.split(".")
+    for end in range(len(parts), 1, -1):
+        p = SRC.joinpath(*parts[:end])
+        if p.with_suffix(".py").exists() or (p / "__init__.py").exists():
+            return True
+    return False
+
+
+def check_modules() -> list[str]:
+    errors = []
+    for doc in doc_files():
+        text = doc.read_text()
+        for ref in sorted(set(MODULE_RE.findall(text))):
+            if not module_resolves(ref):
+                errors.append(f"{doc.name}: unresolvable module {ref!r}")
+    return errors
+
+
+def run_readme_snippets() -> list[str]:
+    sys.path.insert(0, str(SRC))
+    text = (ROOT / "README.md").read_text()
+    namespace: dict = {"__name__": "__readme__"}
+    errors = []
+    for i, block in enumerate(CODE_BLOCK_RE.findall(text), 1):
+        print(f"-- executing README python block {i} ({len(block.splitlines())} lines)")
+        try:
+            exec(compile(block, f"README.md:block{i}", "exec"), namespace)
+        except Exception as e:  # noqa: BLE001 - report, don't crash the check
+            errors.append(f"README.md python block {i} failed: {e!r}")
+    return errors
+
+
+def main() -> int:
+    errors = check_paths() + check_modules()
+    errors += run_readme_snippets()
+    if errors:
+        print("\n".join(f"ERROR: {e}" for e in errors))
+        return 1
+    print("docs check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

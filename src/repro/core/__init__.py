@@ -3,6 +3,14 @@ baselines they are evaluated against (traditional, PPR, PPT, m-PPR, random
 scheduling), plus the dynamic-bandwidth simulator and JAX data-plane
 executor. See DESIGN.md section 1/2."""
 
-from repro.core.bandwidth import BandwidthProcess, IngressModel  # noqa: F401
+from repro.core.bandwidth import BandwidthProcess, BandwidthTrace, IngressModel  # noqa: F401
 from repro.core.plan import Job, RepairPlan, Round, Transfer, validate_plan  # noqa: F401
-from repro.core.simulator import RepairSimulator, Scenario, SimResult  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    ALL_SCHEMES,
+    MULTI_SCHEMES,
+    SINGLE_SCHEMES,
+    RepairSimulator,
+    Scenario,
+    SimResult,
+    run_scheme,
+)

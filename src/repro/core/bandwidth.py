@@ -49,6 +49,13 @@ class BandwidthProcess:
     rho: float = 0.6      # markov: per-epoch correlation
     sigma: float = 0.5    # markov: stationary log-std
     _AR_HORIZON = 32      # markov: truncation (rho^32 ~ 1e-7 at rho=0.6)
+    _CACHE_LIMIT = 128    # per-instance epoch-matrix memo bound
+
+    def __post_init__(self):
+        # Per-instance epoch -> matrix memo. The event loop queries
+        # matrix_at many times per epoch (every hop/epoch event); caching
+        # keeps those queries O(1) without changing any returned value.
+        object.__setattr__(self, "_epoch_cache", {})
 
     def epoch_of(self, t: float) -> int:
         if self.change_interval is None:
@@ -60,12 +67,19 @@ class BandwidthProcess:
             return np.inf
         return (self.epoch_of(t) + 1) * self.change_interval
 
-    def matrix_at(self, t: float) -> np.ndarray:
-        if self.change_interval is None:
-            return self.base
-        if self.mode == "jitter" and self.jitter == 0.0:
-            return self.base
-        e = self.epoch_of(t)
+    @property
+    def num_nodes(self) -> int:
+        return self.base.shape[0]
+
+    def _innovation(self, e: int) -> np.ndarray:
+        """Epoch e's N(0,1) draw (markov mode), keyed on (seed, epoch)."""
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, e]))
+        return rng.standard_normal(self.base.shape)
+
+    def _epoch_matrix(self, e: int, innovations: dict[int, np.ndarray] | None = None) -> np.ndarray:
+        """The epoch-e matrix, uncached. `innovations` optionally supplies
+        precomputed markov draws (bit-identical to `_innovation`) so batch
+        sampling avoids re-deriving the AR window per epoch."""
         rng = np.random.default_rng(np.random.SeedSequence([self.seed, e]))
         if self.mode == "redraw":
             off = ~np.eye(self.base.shape[0], dtype=bool)
@@ -81,8 +95,10 @@ class BandwidthProcess:
             x = np.zeros_like(self.base)
             start = max(0, e - self._AR_HORIZON)
             for i in range(start, e + 1):
-                rng_i = np.random.default_rng(np.random.SeedSequence([self.seed, i]))
-                z = rng_i.standard_normal(self.base.shape)
+                if innovations is not None:
+                    z = innovations[i]
+                else:
+                    z = self._innovation(i)
                 x = x * self.rho + z if i > start else z
             m = self.base * np.exp(self.sigma * np.sqrt(1 - self.rho**2) * x)
         else:
@@ -90,6 +106,125 @@ class BandwidthProcess:
         m = np.maximum(m, self.min_bw)
         np.fill_diagonal(m, 0.0)
         return m
+
+    def matrix_at(self, t: float) -> np.ndarray:
+        """The bandwidth matrix active at time t.
+
+        The return value may be a shared cache entry and is marked
+        read-only — `.copy()` before doing in-place what-if math on it.
+        """
+        if self.change_interval is None:
+            return self.base
+        if self.mode == "jitter" and self.jitter == 0.0:
+            return self.base
+        e = self.epoch_of(t)
+        cached = self._epoch_cache.get(e)
+        if cached is None:
+            if len(self._epoch_cache) >= self._CACHE_LIMIT:
+                self._epoch_cache.clear()
+            cached = self._epoch_matrix(e)
+            cached.setflags(write=False)
+            self._epoch_cache[e] = cached
+        return cached
+
+    def sample_epochs(self, num_epochs: int, *, start_epoch: int = 0) -> np.ndarray:
+        """Batched sampling: the (num_epochs, N, N) stack of epoch matrices.
+
+        Bit-identical to ``[matrix_at(e * interval) for e in epochs]`` but
+        amortized: markov innovations are drawn once per epoch and shared
+        across the overlapping AR windows (O(E) rng draws instead of
+        O(E * horizon)), and per-link math stays vectorized over the full
+        N x N matrix. This is the bulk-sampling substrate for the sweep
+        engine and for recording `BandwidthTrace`s.
+        """
+        if num_epochs < 0 or start_epoch < 0:
+            raise ValueError("num_epochs and start_epoch must be >= 0")
+        n = self.base.shape[0]
+        if self.change_interval is None or (self.mode == "jitter" and self.jitter == 0.0):
+            out = np.broadcast_to(self.base, (num_epochs, n, n)).copy()
+            return out
+        innovations: dict[int, np.ndarray] | None = None
+        if self.mode == "markov":
+            lo = max(0, start_epoch - self._AR_HORIZON)
+            innovations = {
+                i: self._innovation(i)
+                for i in range(lo, start_epoch + num_epochs)
+            }
+        out = np.empty((num_epochs, n, n), dtype=float)
+        for j, e in enumerate(range(start_epoch, start_epoch + num_epochs)):
+            out[j] = self._epoch_matrix(e, innovations)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthTrace:
+    """Replay of recorded bandwidth epochs (same interface as
+    `BandwidthProcess`: `epoch_of` / `epoch_end` / `matrix_at`).
+
+    `epochs[e]` is the bandwidth matrix active during
+    [e * interval, (e+1) * interval). Past the end of the recording the
+    trace either cycles (default — stationary background churn) or holds
+    the final epoch. Traces come from real measurements or from
+    `record()`-ing a synthetic `BandwidthProcess`, which lets a sweep
+    replay the *exact same* bandwidth sample path under every scheme and
+    planner variant.
+    """
+
+    epochs: np.ndarray            # (E, N, N) recorded per-epoch matrices
+    change_interval: float
+    cycle: bool = True
+
+    def __post_init__(self):
+        ep = np.array(self.epochs, dtype=float)      # own + freeze: views of
+        ep.setflags(write=False)                     # it are handed out below
+        if ep.ndim != 3 or ep.shape[1] != ep.shape[2] or ep.shape[0] == 0:
+            raise ValueError(f"epochs must be (E, N, N) with E >= 1, got {ep.shape}")
+        if not self.change_interval or self.change_interval <= 0:
+            raise ValueError("change_interval must be > 0")
+        object.__setattr__(self, "epochs", ep)
+
+    @classmethod
+    def record(
+        cls,
+        process: BandwidthProcess,
+        num_epochs: int,
+        *,
+        start_epoch: int = 0,
+        cycle: bool = True,
+        change_interval: float | None = None,
+    ) -> "BandwidthTrace":
+        """Snapshot `num_epochs` of a BandwidthProcess into a replayable trace."""
+        interval = change_interval or process.change_interval
+        if interval is None:
+            interval = np.inf  # static process: one eternal epoch
+            num_epochs = 1
+        return cls(
+            epochs=process.sample_epochs(num_epochs, start_epoch=start_epoch),
+            change_interval=float(interval) if np.isfinite(interval) else 1e30,
+            cycle=cycle,
+        )
+
+    @property
+    def num_nodes(self) -> int:
+        return self.epochs.shape[1]
+
+    @property
+    def num_epochs(self) -> int:
+        return self.epochs.shape[0]
+
+    def epoch_of(self, t: float) -> int:
+        return int(np.floor(t / self.change_interval))
+
+    def epoch_end(self, t: float) -> float:
+        return (self.epoch_of(t) + 1) * self.change_interval
+
+    def matrix_at(self, t: float) -> np.ndarray:
+        e = self.epoch_of(t)
+        if self.cycle:
+            e = e % self.num_epochs
+        else:
+            e = min(e, self.num_epochs - 1)
+        return self.epochs[e]
 
 
 @dataclasses.dataclass(frozen=True)

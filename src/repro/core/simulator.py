@@ -216,12 +216,115 @@ def execute_pipeline(
 
 
 # ---------------------------------------------------------------- simulator
+SINGLE_SCHEMES = ("traditional", "ppr", "bmf", "ppt", "bmf_static")
+MULTI_SCHEMES = ("mppr", "random", "msrepair")
+ALL_SCHEMES = SINGLE_SCHEMES + MULTI_SCHEMES
+# bmf_static: ablation — BMF's link optimization applied once from the
+# t=0 snapshot (plan-once, like PPT) instead of per round. Isolates the
+# paper's real-time-monitoring contribution from the relay mechanism.
+
+
+def _idle_pool(sc: Scenario, jobs: list[Job]) -> list[int]:
+    involved = {j.requestor for j in jobs} | {j.failed_node for j in jobs}
+    return [x for x in range(sc.num_nodes) if x not in involved]
+
+
+def plan_for_scheme(scheme: str, jobs: list[Job], *, random_seed: int = 0) -> RepairPlan:
+    """Static round plan for any non-PPT scheme (PPT plans a pipeline tree,
+    not rounds — see `run_scheme`)."""
+    if scheme == "traditional":
+        return plan_traditional(jobs[0])
+    if scheme in ("ppr", "bmf", "bmf_static"):
+        return plan_ppr(jobs[0])
+    if scheme == "mppr":
+        return plan_mppr(jobs)
+    if scheme == "random":
+        return plan_random(jobs, seed=random_seed)
+    if scheme == "msrepair":
+        return plan_msrepair(jobs)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def run_scheme(
+    sc: Scenario,
+    scheme: str,
+    *,
+    bmf_optimize_all: bool = False,
+    random_seed: int = 0,
+) -> SimResult:
+    """Plan + execute one scheme on one scenario.
+
+    This is the shared round engine: `RepairSimulator.run` wraps it for the
+    legacy single-scenario path and `repro.sim.sweep` calls it per
+    (scenario, scheme) work item. Results are a pure function of
+    (scenario, scheme, bmf_optimize_all, random_seed) — only
+    `planning_time` is wall-clock and may vary between runs.
+    """
+    jobs = sc.make_jobs()
+    plan_clock = 0.0
+
+    tic = _time.perf_counter()
+    if scheme == "ppt":
+        tree = build_ppt_tree(jobs[0], sc.bw.matrix_at(0.0))
+        plan_clock += _time.perf_counter() - tic
+        t_end = execute_pipeline(tree, 0.0, sc.bw, sc.ingress, sc.chunk_mb)
+        return SimResult(
+            scheme=scheme, total_time=t_end, round_times=[t_end],
+            planning_time=plan_clock, plan=None,
+            log=[f"ppt tree edges={tree.edges}"],
+        )
+    plan = plan_for_scheme(scheme, jobs, random_seed=random_seed)
+    plan_clock += _time.perf_counter() - tic
+
+    validate_plan(
+        plan, max_recv_per_round=len(jobs[0].helpers)
+        if scheme == "traditional" else 1,
+    )
+
+    use_bmf = scheme in ("bmf", "msrepair", "bmf_static")
+    static_plan_time = scheme == "bmf_static"
+    t = 0.0
+    round_times: list[float] = []
+    relay_hops = 0
+    log: list[str] = []
+    executed_rounds: list[Round] = []
+    for rnd in plan.rounds:
+        if use_bmf:
+            tic = _time.perf_counter()
+            bw_now = sc.bw.matrix_at(0.0 if static_plan_time else t)
+            idle = [
+                x for x in _idle_pool(sc, jobs)
+                if x not in rnd.nodes_in_use()
+            ]
+            rnd, stats = bmf.optimize_round(
+                rnd, bw_now, idle, sc.chunk_mb,
+                optimize_all=bmf_optimize_all,
+            )
+            plan_clock += _time.perf_counter() - tic
+            relay_hops += sum(len(tr.relays) for tr in rnd.transfers)
+            if stats.improved_links:
+                log.append(
+                    f"t={t:.2f}s round {len(round_times)}: BMF rerouted "
+                    f"{stats.improved_links} link(s), est -{stats.time_saved:.2f}s"
+                )
+        t_end = execute_round(rnd.transfers, t, sc.bw, sc.ingress, sc.chunk_mb)
+        round_times.append(t_end - t)
+        t = t_end
+        executed_rounds.append(rnd)
+
+    final_plan = RepairPlan(jobs=plan.jobs, rounds=executed_rounds, meta=plan.meta)
+    return SimResult(
+        scheme=scheme, total_time=t, round_times=round_times,
+        planning_time=plan_clock, plan=final_plan, relay_hops=relay_hops,
+        log=log,
+    )
+
+
 class RepairSimulator:
-    SINGLE_SCHEMES = ("traditional", "ppr", "bmf", "ppt", "bmf_static")
-    MULTI_SCHEMES = ("mppr", "random", "msrepair")
-    # bmf_static: ablation — BMF's link optimization applied once from the
-    # t=0 snapshot (plan-once, like PPT) instead of per round. Isolates the
-    # paper's real-time-monitoring contribution from the relay mechanism.
+    """Single-scenario façade over `run_scheme` (the legacy public API)."""
+
+    SINGLE_SCHEMES = SINGLE_SCHEMES
+    MULTI_SCHEMES = MULTI_SCHEMES
 
     def __init__(self, scenario: Scenario, *, bmf_optimize_all: bool = False,
                  random_seed: int = 0):
@@ -229,78 +332,9 @@ class RepairSimulator:
         self.bmf_optimize_all = bmf_optimize_all
         self.random_seed = random_seed
 
-    def _idle_pool(self, jobs: list[Job]) -> list[int]:
-        involved = {j.requestor for j in jobs} | {j.failed_node for j in jobs}
-        return [x for x in range(self.sc.num_nodes) if x not in involved]
-
     def run(self, scheme: str) -> SimResult:
-        sc = self.sc
-        jobs = sc.make_jobs()
-        plan_clock = 0.0
-
-        tic = _time.perf_counter()
-        if scheme == "traditional":
-            plan = plan_traditional(jobs[0])
-        elif scheme in ("ppr", "bmf", "bmf_static"):
-            plan = plan_ppr(jobs[0])
-        elif scheme == "ppt":
-            tree = build_ppt_tree(jobs[0], sc.bw.matrix_at(0.0))
-            plan_clock += _time.perf_counter() - tic
-            t_end = execute_pipeline(tree, 0.0, sc.bw, sc.ingress, sc.chunk_mb)
-            return SimResult(
-                scheme=scheme, total_time=t_end, round_times=[t_end],
-                planning_time=plan_clock, plan=None,
-                log=[f"ppt tree edges={tree.edges}"],
-            )
-        elif scheme == "mppr":
-            plan = plan_mppr(jobs)
-        elif scheme == "random":
-            plan = plan_random(jobs, seed=self.random_seed)
-        elif scheme == "msrepair":
-            plan = plan_msrepair(jobs)
-        else:
-            raise ValueError(f"unknown scheme {scheme!r}")
-        plan_clock += _time.perf_counter() - tic
-
-        validate_plan(
-            plan, max_recv_per_round=len(jobs[0].helpers)
-            if scheme == "traditional" else 1,
-        )
-
-        use_bmf = scheme in ("bmf", "msrepair", "bmf_static")
-        static_plan_time = scheme == "bmf_static"
-        t = 0.0
-        round_times: list[float] = []
-        relay_hops = 0
-        log: list[str] = []
-        executed_rounds: list[Round] = []
-        for rnd in plan.rounds:
-            if use_bmf:
-                tic = _time.perf_counter()
-                bw_now = sc.bw.matrix_at(0.0 if static_plan_time else t)
-                idle = [
-                    x for x in self._idle_pool(jobs)
-                    if x not in rnd.nodes_in_use()
-                ]
-                rnd, stats = bmf.optimize_round(
-                    rnd, bw_now, idle, sc.chunk_mb,
-                    optimize_all=self.bmf_optimize_all,
-                )
-                plan_clock += _time.perf_counter() - tic
-                relay_hops += sum(len(tr.relays) for tr in rnd.transfers)
-                if stats.improved_links:
-                    log.append(
-                        f"t={t:.2f}s round {len(round_times)}: BMF rerouted "
-                        f"{stats.improved_links} link(s), est -{stats.time_saved:.2f}s"
-                    )
-            t_end = execute_round(rnd.transfers, t, sc.bw, sc.ingress, sc.chunk_mb)
-            round_times.append(t_end - t)
-            t = t_end
-            executed_rounds.append(rnd)
-
-        final_plan = RepairPlan(jobs=plan.jobs, rounds=executed_rounds, meta=plan.meta)
-        return SimResult(
-            scheme=scheme, total_time=t, round_times=round_times,
-            planning_time=plan_clock, plan=final_plan, relay_hops=relay_hops,
-            log=log,
+        return run_scheme(
+            self.sc, scheme,
+            bmf_optimize_all=self.bmf_optimize_all,
+            random_seed=self.random_seed,
         )

@@ -1,0 +1,36 @@
+"""Scenario-sweep subsystem: statistical evaluation over *families* of
+repair scenarios.
+
+The paper's claim — per-round monitoring (BMFRepair/MSRepair) tracks a
+rapidly-changing network better than plan-once schemes (PPT) and static
+pipelines (PPR) — is a distributional statement. This layer provides the
+substrate to test it at scale:
+
+* `repro.sim.suite`  — `ScenarioSuite` generators: parameter grids,
+  Monte-Carlo sampling over codes / cluster sizes / volatility regimes /
+  failure patterns, and trace-replay of recorded bandwidth epochs.
+* `repro.sim.sweep`  — the batched sweep engine: runs every (scenario,
+  scheme) pair of a suite concurrently (serial / thread / process
+  dispatch), with deterministic per-scenario seeding, and aggregates
+  per-scheme time distributions, speedup CDFs and planning-overhead stats.
+
+Layering: ec -> core -> sim -> benchmarks. `sim` depends only on
+`repro.core` (numpy-only — sweep workers never import JAX).
+"""
+from repro.sim.suite import (  # noqa: F401
+    FAILURE_PATTERNS,
+    VOLATILITY_REGIMES,
+    GridSuite,
+    MonteCarloSuite,
+    SampleSpace,
+    ScenarioCase,
+    ScenarioSuite,
+    TraceSuite,
+    sample_failures,
+)
+from repro.sim.sweep import (  # noqa: F401
+    CaseResult,
+    SchemeStats,
+    SweepResult,
+    run_sweep,
+)

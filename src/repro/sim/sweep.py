@@ -1,0 +1,262 @@
+"""Batched sweep engine: run a `ScenarioSuite` across schemes, in parallel.
+
+The unit of work is one `ScenarioCase`: every scheme runs against the same
+scenario object, so per-case comparisons (speedups, CDFs) are paired. Work
+items are independent and seeded by the suite, so results are identical
+under serial, thread and process dispatch — the executor only changes
+wall-clock, never output (apart from the wall-clock `planning_time`
+measurements themselves).
+
+Process dispatch uses the "spawn" start method by default: sweep workers
+import only the numpy-based `repro.core` stack (never JAX), so interpreter
+start-up is cheap and fork-safety issues with a JAX-initialized parent are
+avoided.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import multiprocessing
+import os
+from collections.abc import Callable, Sequence
+
+import numpy as np
+
+from repro.core.simulator import SimResult, run_scheme
+from repro.sim.suite import ScenarioCase, ScenarioSuite
+
+
+# ------------------------------------------------------------------ records
+@dataclasses.dataclass
+class CaseResult:
+    """All schemes' results for one scenario case."""
+
+    index: int
+    seed: int
+    params: dict
+    results: dict[str, SimResult]
+
+    def time(self, scheme: str) -> float:
+        return self.results[scheme].total_time
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeStats:
+    """Distributional summary of one scheme over a sweep."""
+
+    scheme: str
+    count: int
+    mean: float
+    std: float
+    p50: float
+    p90: float
+    min: float
+    max: float
+    mean_planning: float       # seconds of plan/optimize wall-clock per case
+    planning_frac: float       # mean planning / (planning + simulated time)
+    mean_rounds: float
+    mean_relay_hops: float
+
+    def __str__(self) -> str:
+        return (
+            f"{self.scheme}: n={self.count} mean={self.mean:.2f}s "
+            f"std={self.std:.2f} p50={self.p50:.2f} p90={self.p90:.2f} "
+            f"plan={self.mean_planning * 1e3:.2f}ms ({self.planning_frac * 100:.2f}%) "
+            f"rounds={self.mean_rounds:.1f} relays={self.mean_relay_hops:.1f}"
+        )
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Structured output of `run_sweep`, with aggregation helpers."""
+
+    suite: str
+    schemes: tuple[str, ...]
+    cases: list[CaseResult]
+
+    def __len__(self) -> int:
+        return len(self.cases)
+
+    def _with(self, scheme: str) -> list[CaseResult]:
+        return [c for c in self.cases if scheme in c.results]
+
+    def times(self, scheme: str) -> np.ndarray:
+        return np.array([c.results[scheme].total_time for c in self._with(scheme)])
+
+    def stats(self, scheme: str) -> SchemeStats:
+        sub = self._with(scheme)
+        if not sub:
+            raise KeyError(f"scheme {scheme!r} has no results in this sweep")
+        t = np.array([c.results[scheme].total_time for c in sub])
+        plan = np.array([c.results[scheme].planning_time for c in sub])
+        rounds = np.array([c.results[scheme].num_rounds for c in sub])
+        relays = np.array([c.results[scheme].relay_hops for c in sub])
+        return SchemeStats(
+            scheme=scheme, count=len(sub),
+            mean=float(t.mean()), std=float(t.std()),
+            p50=float(np.percentile(t, 50)), p90=float(np.percentile(t, 90)),
+            min=float(t.min()), max=float(t.max()),
+            mean_planning=float(plan.mean()),
+            planning_frac=float((plan / (plan + t)).mean()),
+            mean_rounds=float(rounds.mean()),
+            mean_relay_hops=float(relays.mean()),
+        )
+
+    def summary(self) -> dict[str, SchemeStats]:
+        return {s: self.stats(s) for s in self.schemes if self._with(s)}
+
+    def speedups(self, baseline: str, scheme: str) -> np.ndarray:
+        """Paired per-case ratios baseline_time / scheme_time (>1 = faster)."""
+        pairs = [
+            c for c in self.cases
+            if baseline in c.results and scheme in c.results
+        ]
+        return np.array([
+            c.results[baseline].total_time / c.results[scheme].total_time
+            for c in pairs
+        ])
+
+    def speedup_cdf(self, baseline: str, scheme: str) -> tuple[np.ndarray, np.ndarray]:
+        """(sorted speedups, empirical CDF) of `scheme` vs `baseline`."""
+        s = np.sort(self.speedups(baseline, scheme))
+        return s, np.arange(1, len(s) + 1) / len(s)
+
+    def speedup_percentile(self, baseline: str, scheme: str, q: float) -> float:
+        """The q-th percentile (0..100) of the paired speedup distribution,
+        with the same interpolation convention as `SchemeStats` p50/p90."""
+        return float(np.percentile(self.speedups(baseline, scheme), q))
+
+    def reduction_pct(self, baseline: str, scheme: str) -> float:
+        """Mean % repair-time reduction of `scheme` vs `baseline` (paper's
+        headline metric): 100 * (1 - mean(scheme) / mean(baseline))."""
+        pairs = [
+            c for c in self.cases
+            if baseline in c.results and scheme in c.results
+        ]
+        if not pairs:
+            return float("nan")
+        b = np.mean([c.results[baseline].total_time for c in pairs])
+        s = np.mean([c.results[scheme].total_time for c in pairs])
+        return float(100.0 * (1.0 - s / b))
+
+    def filter(self, pred: Callable[[CaseResult], bool]) -> "SweepResult":
+        return SweepResult(self.suite, self.schemes,
+                           [c for c in self.cases if pred(c)])
+
+    def group_by(self, *keys: str) -> dict[tuple, "SweepResult"]:
+        """Split into sub-sweeps keyed by case-param values (grid axes)."""
+        groups: dict[tuple, list[CaseResult]] = {}
+        for c in self.cases:
+            key = tuple(c.params.get(k) for k in keys)
+            groups.setdefault(key, []).append(c)
+        return {
+            key: SweepResult(self.suite, self.schemes, sub)
+            for key, sub in sorted(groups.items(), key=lambda kv: str(kv[0]))
+        }
+
+    def summary_table(self) -> str:
+        return "\n".join(str(st) for st in self.summary().values())
+
+
+# ------------------------------------------------------------------- engine
+def _strip(r: SimResult) -> SimResult:
+    """Drop the executed plan/log to keep cross-process results light."""
+    return dataclasses.replace(r, plan=None, log=[])
+
+
+def _run_case(
+    case: ScenarioCase,
+    schemes: tuple[str, ...],
+    keep_plans: bool,
+    bmf_optimize_all: bool,
+) -> CaseResult:
+    results: dict[str, SimResult] = {}
+    for scheme in schemes:
+        r = run_scheme(
+            case.scenario, scheme,
+            bmf_optimize_all=bmf_optimize_all, random_seed=case.seed,
+        )
+        results[scheme] = r if keep_plans else _strip(r)
+    return CaseResult(
+        index=case.index, seed=case.seed, params=dict(case.params),
+        results=results,
+    )
+
+
+def _spawn_safe() -> bool:
+    """Spawn workers re-import __main__; interactive/stdin sessions can't."""
+    import sys
+
+    main = sys.modules.get("__main__")
+    if main is None:
+        return False
+    if getattr(main, "__spec__", None) is not None:
+        return True
+    path = getattr(main, "__file__", None)
+    return bool(path) and os.path.exists(path)
+
+
+def _resolve_executor(executor: str, num_items: int) -> str:
+    if executor != "auto":
+        return executor
+    cpus = os.cpu_count() or 1
+    if cpus > 1 and num_items >= 8 and _spawn_safe():
+        return "process"
+    return "serial"
+
+
+def run_sweep(
+    suite: ScenarioSuite,
+    *,
+    schemes: Sequence[str] | None = None,
+    executor: str = "auto",
+    max_workers: int | None = None,
+    keep_plans: bool = False,
+    bmf_optimize_all: bool = False,
+    mp_context: str = "spawn",
+) -> SweepResult:
+    """Run every case of `suite` under every applicable scheme.
+
+    `schemes` overrides both the suite default and per-case scheme sets;
+    otherwise each case runs `case.schemes or suite.schemes`. Executors:
+    "serial", "thread", "process" or "auto" (process pool for >= 8 cases
+    on a multi-core host). Output is independent of the executor choice.
+    """
+    cases = list(suite.cases())
+    work = [
+        (case, tuple(schemes) if schemes is not None
+         else (case.schemes or tuple(suite.schemes)))
+        for case in cases
+    ]
+    mode = _resolve_executor(executor, len(work))
+
+    def jobs():
+        for case, case_schemes in work:
+            yield case, case_schemes, keep_plans, bmf_optimize_all
+
+    if mode == "serial":
+        results = [_run_case(*args) for args in jobs()]
+    elif mode == "thread":
+        with concurrent.futures.ThreadPoolExecutor(max_workers=max_workers) as pool:
+            results = list(pool.map(lambda args: _run_case(*args), jobs()))
+    elif mode == "process":
+        ctx = multiprocessing.get_context(mp_context)
+        workers = max_workers or os.cpu_count() or 1
+        chunk = max(1, len(work) // (workers * 4))
+        with concurrent.futures.ProcessPoolExecutor(
+                max_workers=workers, mp_context=ctx) as pool:
+            results = list(pool.map(
+                _run_case_star, jobs(), chunksize=chunk))
+    else:
+        raise ValueError(f"unknown executor {executor!r}")
+
+    all_schemes: list[str] = []
+    for _, case_schemes in work:
+        for s in case_schemes:
+            if s not in all_schemes:
+                all_schemes.append(s)
+    return SweepResult(suite=suite.name, schemes=tuple(all_schemes), cases=results)
+
+
+def _run_case_star(args) -> CaseResult:
+    return _run_case(*args)

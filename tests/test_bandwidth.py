@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import topology
-from repro.core.bandwidth import BandwidthProcess, IngressModel
+from repro.core.bandwidth import BandwidthProcess, BandwidthTrace, IngressModel
 
 
 def test_static_process():
@@ -40,6 +40,69 @@ def test_markov_correlation_decays():
     r10 = np.corrcoef(x[:-10], x[10:])[0, 1]
     assert r1 > 0.55            # one-epoch memory ~ rho
     assert abs(r10) < r1 - 0.2  # decayed at lag 10
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("jitter", {}),
+    ("redraw", {}),
+    ("markov", {"sigma": 1.0, "rho": 0.9}),
+])
+def test_sample_epochs_matches_matrix_at(mode, kw):
+    """Batched sampling is bit-identical to per-epoch random access,
+    including across the markov AR-window truncation boundary."""
+    m = topology.heterogeneous_matrix(6, seed=2)
+    p = BandwidthProcess(base=m, change_interval=2.0, seed=11, mode=mode, **kw)
+    horizon = BandwidthProcess._AR_HORIZON
+    batch = p.sample_epochs(horizon + 10)
+    for e in range(horizon + 10):
+        assert np.array_equal(batch[e], p.matrix_at(e * 2.0 + 0.5)), (mode, e)
+    offset = p.sample_epochs(6, start_epoch=horizon + 2)
+    assert np.array_equal(offset, batch[horizon + 2:horizon + 8])
+
+
+def test_sample_epochs_static():
+    m = topology.uniform_matrix(4, 10.0)
+    p = BandwidthProcess(base=m, change_interval=None)
+    batch = p.sample_epochs(3)
+    assert batch.shape == (3, 4, 4)
+    assert np.array_equal(batch[2], m)
+
+
+def test_epoch_cache_is_transparent():
+    m = topology.heterogeneous_matrix(5, seed=4)
+    p = BandwidthProcess(base=m, change_interval=2.0, seed=9, mode="markov")
+    fresh = BandwidthProcess(base=m, change_interval=2.0, seed=9, mode="markov")
+    a = p.matrix_at(6.5)
+    _ = [p.matrix_at(t) for t in (0.1, 2.2, 4.9, 6.6, 6.9)]
+    assert np.array_equal(p.matrix_at(6.5), a)
+    assert np.array_equal(fresh.matrix_at(6.5), a)
+
+
+def test_trace_replays_recorded_process():
+    m = topology.heterogeneous_matrix(5, seed=3)
+    p = BandwidthProcess(base=m, change_interval=2.0, seed=5, mode="markov")
+    tr = BandwidthTrace.record(p, 8)
+    for e in range(8):
+        assert np.array_equal(tr.matrix_at(e * 2.0 + 1.0), p.matrix_at(e * 2.0 + 1.0))
+    # epoch bookkeeping matches the source process inside the recording
+    assert tr.epoch_of(5.0) == p.epoch_of(5.0)
+    assert tr.epoch_end(5.0) == p.epoch_end(5.0)
+
+
+def test_trace_cycle_and_clamp():
+    m = topology.heterogeneous_matrix(4, seed=6)
+    p = BandwidthProcess(base=m, change_interval=1.0, seed=2, mode="redraw")
+    cyc = BandwidthTrace.record(p, 4, cycle=True)
+    assert np.array_equal(cyc.matrix_at(5.5), cyc.matrix_at(1.5))   # 5 % 4 = 1
+    clamp = BandwidthTrace.record(p, 4, cycle=False)
+    assert np.array_equal(clamp.matrix_at(99.0), clamp.matrix_at(3.5))
+
+
+def test_trace_validates_shape():
+    with pytest.raises(ValueError):
+        BandwidthTrace(epochs=np.zeros((3, 2)), change_interval=1.0)
+    with pytest.raises(ValueError):
+        BandwidthTrace(epochs=np.zeros((2, 3, 3)), change_interval=0.0)
 
 
 def test_ingress_single_link_identity():

@@ -1,6 +1,7 @@
 """GF(256) field axioms (hypothesis) + table cross-checks."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.ec import gf256

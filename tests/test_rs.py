@@ -1,5 +1,8 @@
 """RS(n,k) MDS property: any <= n-k erasures decode (hypothesis)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.ec.rs import RSCode, generator_matrix
