@@ -8,8 +8,9 @@ Since the sweep engine landed, each figure is a *declarative suite
 definition* (a `GridSuite`/`MonteCarloSuite` in its bench module) executed
 by one `repro.sim.sweep.run_sweep` call; this module keeps the scenario
 factories, the CSV row type, and a legacy-compatible `run_trials` wrapper.
-Set REPRO_SWEEP_EXECUTOR=serial|thread|process|auto to pick the dispatcher
-(default auto: a process pool on multi-core hosts).
+Set REPRO_SWEEP_EXECUTOR=serial|thread|process|vectorized|auto to pick the
+dispatcher (default vectorized: the batched array engine from
+`repro.core.engine`, which matches the serial executor case for case).
 """
 from __future__ import annotations
 
@@ -28,7 +29,7 @@ MININET_HOSTS = 14
 BW_LOW, BW_HIGH = 3.0, 30.0
 TRIALS = 20                      # "We run each group of experiments over 20 times"
 
-BENCH_EXECUTOR = os.environ.get("REPRO_SWEEP_EXECUTOR", "auto")
+BENCH_EXECUTOR = os.environ.get("REPRO_SWEEP_EXECUTOR", "vectorized")
 
 
 @dataclasses.dataclass

@@ -15,7 +15,7 @@ import time
 def main() -> None:
     from benchmarks import (bench_ablation, bench_aliyun, bench_fig8,
                             bench_fig9, bench_fig10, bench_fig11,
-                            bench_kernels, bench_table2)
+                            bench_kernels, bench_sweep, bench_table2)
     modules = [
         ("table2", bench_table2),
         ("fig8", bench_fig8),
@@ -25,6 +25,7 @@ def main() -> None:
         ("aliyun", bench_aliyun),
         ("kernels", bench_kernels),
         ("ablation", bench_ablation),
+        ("sweep", bench_sweep),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

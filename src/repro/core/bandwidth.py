@@ -55,7 +55,11 @@ class BandwidthProcess:
         # Per-instance epoch -> matrix memo. The event loop queries
         # matrix_at many times per epoch (every hop/epoch event); caching
         # keeps those queries O(1) without changing any returned value.
+        # The innovation memo serves the overlapping markov AR windows:
+        # consecutive epochs share all but one N(0,1) draw, so caching
+        # cuts epoch-matrix generation from O(horizon) to O(1) rng calls.
         object.__setattr__(self, "_epoch_cache", {})
+        object.__setattr__(self, "_innov_cache", {})
 
     def epoch_of(self, t: float) -> int:
         if self.change_interval is None:
@@ -73,8 +77,15 @@ class BandwidthProcess:
 
     def _innovation(self, e: int) -> np.ndarray:
         """Epoch e's N(0,1) draw (markov mode), keyed on (seed, epoch)."""
-        rng = np.random.default_rng(np.random.SeedSequence([self.seed, e]))
-        return rng.standard_normal(self.base.shape)
+        z = self._innov_cache.get(e)
+        if z is None:
+            if len(self._innov_cache) >= 4 * self._CACHE_LIMIT:
+                self._innov_cache.clear()
+            rng = np.random.default_rng(np.random.SeedSequence([self.seed, e]))
+            z = rng.standard_normal(self.base.shape)
+            z.setflags(write=False)
+            self._innov_cache[e] = z
+        return z
 
     def _epoch_matrix(self, e: int, innovations: dict[int, np.ndarray] | None = None) -> np.ndarray:
         """The epoch-e matrix, uncached. `innovations` optionally supplies
@@ -251,6 +262,23 @@ class IngressModel:
     def total_factor(self, m: int) -> float:
         return max(self.floor, 1.0 - self.degrade * (m - 1))
 
+    def share_weights(self, m: int, receiver: int, epoch: int) -> np.ndarray:
+        """The Dirichlet split of `m` concurrent in-links at `receiver`.
+
+        Keyed on (seed, receiver, m) — plus epoch when shares are not
+        persistent — so the split is a pure function of the episode, not of
+        when or how often it is queried. This is the single source of truth
+        for both the per-event object engine (`effective_rates`) and the
+        batched vectorized engine, which memoizes these vectors per batch.
+        """
+        if m <= 1:
+            return np.ones(m)
+        key = [self.seed, int(receiver), int(m)]
+        if not self.persistent_shares:
+            key.append(int(epoch))
+        rng = np.random.default_rng(np.random.SeedSequence(key))
+        return rng.dirichlet(np.full(m, self.alpha))
+
     def effective_rates(
         self,
         link_bws: np.ndarray,
@@ -265,11 +293,7 @@ class IngressModel:
         if m == 1:
             return link_bws.copy()
         cap = float(link_bws.max()) * self.total_factor(m)
-        key = [self.seed, int(receiver), m]
-        if not self.persistent_shares:
-            key.append(int(epoch))
-        rng = np.random.default_rng(np.random.SeedSequence(key))
-        w = rng.dirichlet(np.full(m, self.alpha))
+        w = self.share_weights(m, receiver, epoch)
         return np.minimum(link_bws, w * cap)
 
     # fraction of a link's rate retained when the node simultaneously moves

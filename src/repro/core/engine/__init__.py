@@ -1,0 +1,33 @@
+"""Array-native repair engine: compiled plan arrays + batched steppers.
+
+The compile/execute split mirrors a small compiler stack:
+
+* `repro.core.engine.arrays` — `compile_plan` lowers the object plan IR
+  to `PlanArrays` (padded integer arrays + uint64 term bitmasks),
+  `decompile` round-trips exactly, `validate_plan_arrays` is the array
+  fast path behind `repro.core.plan.validate_plan`;
+* `repro.core.engine.vectorized` — masked-array event steppers that
+  advance a whole `(B, ...)` batch of scenarios at once, plus
+  `run_scheme_vectorized`, the batched twin of `simulator.run_scheme`
+  that `repro.sim.sweep.run_sweep(executor="vectorized")` dispatches to.
+
+The object-based engine in `repro.core.simulator` stays the reference
+implementation; parity tests pin the vectorized path to it.
+"""
+from repro.core.engine.arrays import (PlanArrays, UnsupportedPlanError,
+                                      compile_plan, decompile,
+                                      validate_plan_arrays)
+from repro.core.engine.vectorized import (execute_pipeline_batch,
+                                          execute_round_batch,
+                                          run_scheme_vectorized)
+
+__all__ = [
+    "PlanArrays",
+    "UnsupportedPlanError",
+    "compile_plan",
+    "decompile",
+    "validate_plan_arrays",
+    "execute_pipeline_batch",
+    "execute_round_batch",
+    "run_scheme_vectorized",
+]

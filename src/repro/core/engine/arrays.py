@@ -1,0 +1,288 @@
+"""Structure-of-arrays IR for repair plans.
+
+`compile_plan` lowers the object IR (`RepairPlan` / `Round` / `Transfer`)
+into `PlanArrays`: padded integer arrays (hop endpoints, round offsets,
+job ids) plus uint64 *term bitmasks* — one bit per helper node id. The
+lowering is lossless: `decompile` reconstructs the exact original plan
+(`decompile(compile_plan(p)) == p` for every planner's output, including
+BMF-relayed paths), so the array form can sit on the hot path while the
+object form stays the human-readable reference.
+
+`validate_plan_arrays` is the array fast path behind
+`repro.core.plan.validate_plan`: role conflicts per round become
+`np.bincount`s over node ids, and the fragment bookkeeping (which terms
+are XOR-folded where) becomes bitwise ops on a `(jobs, nodes)` uint64
+holdings table instead of dict-of-set mutation.
+
+Term (helper) node ids must fit a 64-bit mask (id < 64) — path, relay
+and requestor ids are plain integers and have no such limit;
+`compile_plan` raises `UnsupportedPlanError` otherwise and callers fall
+back to the object path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.plan import Job, RepairPlan, Round, Transfer
+
+_MAX_MASK_NODES = 64
+
+
+class UnsupportedPlanError(ValueError):
+    """The plan cannot be lowered to arrays (helper/term ids >= 64)."""
+
+
+def _terms_mask(terms) -> int:
+    mask = 0
+    for t in terms:
+        t = int(t)
+        if not 0 <= t < _MAX_MASK_NODES:
+            raise UnsupportedPlanError(
+                f"term node id {t} does not fit a uint64 bitmask"
+            )
+        mask |= 1 << t
+    return mask
+
+
+def _mask_terms(mask: int) -> frozenset[int]:
+    out = []
+    m = int(mask)
+    while m:
+        b = m & -m
+        out.append(b.bit_length() - 1)
+        m ^= b
+    return frozenset(out)
+
+
+@dataclasses.dataclass
+class PlanArrays:
+    """Compiled `RepairPlan`: jobs, transfers and rounds as padded arrays.
+
+    Transfers are stored round-major (round r occupies rows
+    `round_start[r]:round_start[r + 1]`, original in-round order
+    preserved). Paths are padded with -1 to the longest path in the plan;
+    `t_path_len` holds each row's true length. `t_job` carries the raw
+    `Transfer.job` id for exact round-tripping, `t_job_idx` the position
+    of that job in the `jobs` list (what the engine indexes with).
+    """
+
+    # jobs (J rows, original order)
+    job_id: np.ndarray          # (J,) int32 — raw Job.job_id
+    job_failed: np.ndarray      # (J,) int32
+    job_requestor: np.ndarray   # (J,) int32
+    job_helpers: np.ndarray     # (J, Hmax) int32, -1 padded (order kept)
+    job_helpers_len: np.ndarray  # (J,) int32
+    job_terms: np.ndarray       # (J,) uint64 — full term bitmask
+
+    # transfers (T rows, round-major)
+    t_src: np.ndarray           # (T,) int32
+    t_dst: np.ndarray           # (T,) int32
+    t_job: np.ndarray           # (T,) int32 — raw job id
+    t_job_idx: np.ndarray       # (T,) int32 — row into the job arrays
+    t_terms: np.ndarray         # (T,) uint64 — payload term bitmask
+    t_path: np.ndarray          # (T, Pmax) int32, -1 padded
+    t_path_len: np.ndarray      # (T,) int32
+
+    # rounds
+    round_start: np.ndarray     # (R + 1,) int32 offsets into transfer rows
+
+    num_nodes: int              # max node id referenced + 1
+    meta: dict
+
+    @property
+    def num_jobs(self) -> int:
+        return int(self.job_id.shape[0])
+
+    @property
+    def num_rounds(self) -> int:
+        return int(self.round_start.shape[0]) - 1
+
+    @property
+    def num_transfers(self) -> int:
+        return int(self.t_src.shape[0])
+
+    def round_rows(self, r: int) -> slice:
+        return slice(int(self.round_start[r]), int(self.round_start[r + 1]))
+
+    def round_hops(self, r: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Hop endpoint arrays for round r: (hop_u, hop_v, n_hops).
+
+        hop_u/hop_v are (n, Hmax) with hop h of transfer i being
+        `hop_u[i, h] -> hop_v[i, h]`; rows are valid up to `n_hops[i]`.
+        """
+        sl = self.round_rows(r)
+        path = self.t_path[sl]
+        return path[:, :-1], path[:, 1:], self.t_path_len[sl] - 1
+
+
+def compile_plan(plan: RepairPlan) -> PlanArrays:
+    """Lower a `RepairPlan` to `PlanArrays` (exact, reversible)."""
+    jobs = plan.jobs
+    hmax = max(max((len(j.helpers) for j in jobs), default=0), 1)
+    job_helpers = [list(j.helpers) + [-1] * (hmax - len(j.helpers))
+                   for j in jobs]
+    job_index = {j.job_id: i for i, j in enumerate(jobs)}
+
+    transfers = [t for rnd in plan.rounds for t in rnd.transfers]
+    counts = [len(rnd.transfers) for rnd in plan.rounds]
+    pmax = max(max((len(t.path) for t in transfers), default=2), 2)
+    t_job_idx = []
+    for t in transfers:
+        if t.job not in job_index:
+            raise UnsupportedPlanError(f"transfer {t} references unknown job")
+        t_job_idx.append(job_index[t.job])
+
+    max_node = max(
+        [0]
+        + [x for j in jobs for x in (j.failed_node, j.requestor, *j.helpers)]
+        + [x for t in transfers for x in t.path]
+    )
+    return PlanArrays(
+        job_id=np.array([j.job_id for j in jobs], dtype=np.int32),
+        job_failed=np.array([j.failed_node for j in jobs], dtype=np.int32),
+        job_requestor=np.array([j.requestor for j in jobs], dtype=np.int32),
+        job_helpers=np.array(job_helpers, dtype=np.int32).reshape(
+            len(jobs), hmax),
+        job_helpers_len=np.array([len(j.helpers) for j in jobs],
+                                 dtype=np.int32),
+        job_terms=np.array([_terms_mask(j.helpers) for j in jobs],
+                           dtype=np.uint64),
+        t_src=np.array([t.src for t in transfers], dtype=np.int32),
+        t_dst=np.array([t.dst for t in transfers], dtype=np.int32),
+        t_job=np.array([t.job for t in transfers], dtype=np.int32),
+        t_job_idx=np.array(t_job_idx, dtype=np.int32),
+        t_terms=np.array([_terms_mask(t.terms) for t in transfers],
+                         dtype=np.uint64),
+        t_path=np.array(
+            [list(t.path) + [-1] * (pmax - len(t.path)) for t in transfers],
+            dtype=np.int32).reshape(len(transfers), pmax),
+        t_path_len=np.array([len(t.path) for t in transfers],
+                            dtype=np.int32),
+        round_start=np.concatenate(
+            [[0], np.cumsum(counts, dtype=np.int64)]).astype(np.int32),
+        num_nodes=max_node + 1,
+        meta=dict(plan.meta),
+    )
+
+
+def decompile(pa: PlanArrays) -> RepairPlan:
+    """Reconstruct the exact `RepairPlan` that `compile_plan` lowered."""
+    jobs = [
+        Job(
+            job_id=int(pa.job_id[i]),
+            failed_node=int(pa.job_failed[i]),
+            requestor=int(pa.job_requestor[i]),
+            helpers=tuple(
+                int(h) for h in pa.job_helpers[i, : int(pa.job_helpers_len[i])]
+            ),
+        )
+        for i in range(pa.num_jobs)
+    ]
+    rounds = []
+    for r in range(pa.num_rounds):
+        sl = pa.round_rows(r)
+        rounds.append(Round(transfers=[
+            Transfer(
+                src=int(pa.t_src[i]),
+                dst=int(pa.t_dst[i]),
+                job=int(pa.t_job[i]),
+                terms=_mask_terms(pa.t_terms[i]),
+                path=tuple(int(x) for x in
+                           pa.t_path[i, : int(pa.t_path_len[i])]),
+            )
+            for i in range(sl.start, sl.stop)
+        ]))
+    return RepairPlan(jobs=jobs, rounds=rounds, meta=dict(pa.meta))
+
+
+def validate_plan_arrays(pa: PlanArrays, *, max_recv_per_round: int = 1) -> None:
+    """Array fast path of `repro.core.plan.validate_plan`.
+
+    Enforces the same invariants (and raises `ValueError` for the same
+    violations) as the object-based `FragmentState` walk. Role exclusivity
+    is checked for *all rounds at once*: one `np.bincount` per role over
+    `round * N + node` keys replaces per-round dict counters. Fragment
+    movement stays a sequential walk, but over term *bitmasks* (python
+    ints, no set allocation). When a plan holds several violations the
+    first one reported may differ from the object path; the accept/reject
+    verdict never does.
+    """
+    n = max(int(pa.num_nodes), 1)
+    num_r = pa.num_rounds
+    num_t = pa.num_transfers
+    if num_t:
+        counts = np.diff(pa.round_start).astype(np.int64)
+        round_id = np.repeat(np.arange(num_r, dtype=np.int64), counts)
+        size = num_r * n
+        send_c = np.bincount(round_id * n + pa.t_src, minlength=size)
+        recv_c = np.bincount(round_id * n + pa.t_dst, minlength=size)
+        cols = np.arange(pa.t_path.shape[1])
+        relay_sel = ((cols[None, :] >= 1)
+                     & (cols[None, :] < (pa.t_path_len - 1)[:, None]))
+        relay_keys = (round_id[:, None] * n + pa.t_path)[relay_sel]
+        relay_c = (np.bincount(relay_keys, minlength=size)
+                   if relay_keys.size else np.zeros(size, dtype=np.int64))
+
+        def _first(mask):
+            k = int(np.nonzero(mask)[0][0])
+            return k % n, k
+
+        if (send_c > 1).any():
+            node, k = _first(send_c > 1)
+            raise ValueError(
+                f"node {node} sends {int(send_c[k])} transfers in one round")
+        if ((send_c > 0) & (relay_c > 0)).any():
+            node, _ = _first((send_c > 0) & (relay_c > 0))
+            raise ValueError(f"node {node} both sends and relays")
+        if ((send_c > 0) & (recv_c > 0)).any():
+            node, _ = _first((send_c > 0) & (recv_c > 0))
+            raise ValueError(f"node {node} both sends and receives in a round")
+        if (recv_c > max_recv_per_round).any():
+            node, k = _first(recv_c > max_recv_per_round)
+            raise ValueError(
+                f"node {node} receives {int(recv_c[k])} transfers in one round")
+        if ((recv_c > 0) & (relay_c > 0)).any():
+            node, _ = _first((recv_c > 0) & (relay_c > 0))
+            raise ValueError(f"node {node} both receives and relays")
+        if (relay_c > 1).any():
+            node, k = _first(relay_c > 1)
+            raise ValueError(
+                f"relay node {node} used {int(relay_c[k])} times in one round")
+
+    # fragment movement, in transfer order (a source's holding must be
+    # forwarded whole — XOR-folds cannot be split); python-int bit ops
+    hold = [[0] * n for _ in range(pa.num_jobs)]
+    helpers_flat = pa.job_helpers.tolist()
+    for j in range(pa.num_jobs):
+        for h in helpers_flat[j][: int(pa.job_helpers_len[j])]:
+            hold[j][h] = 1 << h
+    srcs = pa.t_src.tolist()
+    dsts = pa.t_dst.tolist()
+    jidx = pa.t_job_idx.tolist()
+    jraw = pa.t_job.tolist()
+    terms = pa.t_terms.tolist()
+    for i in range(num_t):
+        j, s, d, sent = jidx[i], srcs[i], dsts[i], terms[i]
+        row = hold[j]
+        held = row[s]
+        if held == 0 or held != sent:
+            raise ValueError(
+                f"transfer {s}->{d} (job {jraw[i]}) sends terms not matching "
+                f"src holding (held={sorted(_mask_terms(held))}, "
+                f"sent={sorted(_mask_terms(sent))})"
+            )
+        row[s] = 0
+        if row[d] & sent:
+            raise ValueError(
+                f"duplicate terms arriving at node {d}: "
+                f"{sorted(_mask_terms(row[d] & sent))}"
+            )
+        row[d] |= sent
+
+    full = pa.job_terms.tolist()
+    req = pa.job_requestor.tolist()
+    for j in range(pa.num_jobs):
+        if hold[j][req[j]] != full[j]:
+            raise ValueError("plan does not complete all jobs")

@@ -1,0 +1,628 @@
+"""Batched vectorized round/pipeline engine over `PlanArrays`.
+
+This is the array-native twin of `repro.core.simulator`: instead of one
+Python event loop per scenario, a whole *batch* of scenarios advances
+together through masked `(B, ...)` state arrays. Every case still takes
+exactly the event steps it would take alone — each case has its own
+`dt`, epoch boundary and completion mask — so per-case results match the
+object engine (same float ops in the same order — bit-identical in
+practice; the parity tests pin 1e-6 relative); only the bookkeeping
+between events is vectorized:
+
+* fan-in contention groups become a stable sort + segment reductions
+  (`np.maximum.reduceat`) instead of per-receiver dict building, with
+  Dirichlet share vectors (`IngressModel.share_weights`) memoized per
+  (case, receiver, fan-in) across the whole batch instead of redrawn
+  every event;
+* PPT's recursive `supply_rate` becomes an iterative topological
+  min-scan over edge-depth levels (`np.minimum.at` scatters);
+* epoch flips refresh a per-case `(B, N, N)` bandwidth stack only when a
+  case actually crosses its epoch boundary.
+
+Planning (the schemes' Python planners and per-round BMF re-optimization)
+stays per-case object code — it is ~3% of repair time (paper Fig. 8) and
+is where the paper's "monitor + replan every timestamp" logic lives. The
+`(B, ...)` layout is the seam a future `jax.vmap`/Pallas stepper plugs
+into: the inner loop is already pure array math over static shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time as _time
+
+import numpy as np
+
+from repro.core import bmf
+from repro.core.engine.arrays import (PlanArrays, UnsupportedPlanError,
+                                      compile_plan, validate_plan_arrays)
+from repro.core.plan import RepairPlan, Round
+from repro.core.ppt import build_ppt_tree
+from repro.core.simulator import (Scenario, SimResult, _idle_pool,
+                                  pipeline_fill_latency, plan_for_scheme,
+                                  run_scheme)
+
+_EPS = 1e-9
+_GUARD = 100_000
+_MISSING = object()
+
+
+# ------------------------------------------------------------ batch context
+class _BatchBandwidth:
+    """Per-case `(B, N, N)` bandwidth stack, refreshed on epoch crossings.
+
+    `BandwidthTrace` cases (the bulk `sample_epochs` recordings from
+    `TraceSuite.freeze`) index the recorded epoch stack directly;
+    everything else goes through `matrix_at`, whose per-instance epoch
+    memo is shared with the object engine and across a case's schemes.
+    Either way a case's matrix is reloaded only when its own epoch
+    boundary passes — between epochs the stack row is reused as-is.
+    """
+
+    _DENSE_LIMIT_BYTES = 128 * 1024 * 1024
+
+    def __init__(self, bwps, num_nodes: int):
+        from repro.core.bandwidth import BandwidthTrace
+
+        self.bwps = list(bwps)
+        b = len(self.bwps)
+        self.stack = np.zeros((b, num_nodes, num_nodes), dtype=float)
+        self.epoch = np.zeros(b, dtype=np.int64)
+        self.epoch_end = np.full(b, -np.inf)
+        # per-case serving recipe: (interval, epochs, num_epochs, cycle)
+        # for traces, None for everything served through matrix_at
+        self._trace = [
+            (bwp.change_interval, bwp.epochs, bwp.num_epochs, bwp.cycle)
+            if type(bwp) is BandwidthTrace else None
+            for bwp in self.bwps
+        ]
+        # all-trace batches get a padded (B, Emax, N, N) stack so a whole
+        # refresh is one fancy gather instead of a per-case python loop
+        self._dense = None
+        if all(tr is not None for tr in self._trace) and b:
+            emax = max(tr[2] for tr in self._trace)
+            if b * emax * num_nodes * num_nodes * 8 <= self._DENSE_LIMIT_BYTES:
+                dense = np.zeros((b, emax, num_nodes, num_nodes))
+                for i, (_, epochs, num_e, _) in enumerate(self._trace):
+                    n = epochs.shape[1]
+                    dense[i, :num_e, :n, :n] = epochs
+                self._dense = dense
+                self._interval = np.array([tr[0] for tr in self._trace])
+                self._num_epochs = np.array([tr[2] for tr in self._trace])
+                self._cycle = np.array([tr[3] for tr in self._trace])
+
+    def refresh(self, t: np.ndarray, active: np.ndarray) -> None:
+        """Reload matrices for active cases whose epoch boundary passed."""
+        crossed = active & (t >= self.epoch_end)
+        if self._dense is not None:
+            rows = np.nonzero(crossed)[0]
+            if rows.size:
+                # floor of true division == BandwidthTrace.epoch_of
+                # (floor(t / i), NOT t // i — float floordiv is fmod-based
+                # and can differ by one epoch at exact-multiple boundaries)
+                e = np.floor(t[rows] / self._interval[rows]).astype(np.int64)
+                idx = np.where(self._cycle[rows], e % self._num_epochs[rows],
+                               np.minimum(e, self._num_epochs[rows] - 1))
+                self.stack[rows] = self._dense[rows, idx]
+                self.epoch[rows] = e
+                self.epoch_end[rows] = (e + 1) * self._interval[rows]
+            return
+        for b in np.nonzero(crossed)[0]:
+            tb = float(t[b])
+            trace = self._trace[b]
+            if trace is not None:
+                interval, epochs, num_epochs, cycle = trace
+                e = math.floor(tb / interval)   # == epoch_of(tb)
+                self.epoch[b] = e
+                self.epoch_end[b] = (e + 1) * interval
+                self.stack[b] = epochs[e % num_epochs if cycle
+                                       else min(e, num_epochs - 1)]
+            else:
+                bwp = self.bwps[b]
+                self.epoch[b] = bwp.epoch_of(tb)
+                self.epoch_end[b] = bwp.epoch_end(tb)
+                self.stack[b] = bwp.matrix_at(tb)
+
+
+def _group_structure(
+    b_idx: np.ndarray,
+    recv: np.ndarray,
+    epoch: np.ndarray,
+    num_nodes: int,
+    ingresses,
+    degrade: np.ndarray,
+    floor: np.ndarray,
+    wcache: dict,
+):
+    """Precompute the fan-in grouping of concurrent (case, link) pairs.
+
+    Returns None when every receiver has a single sender (m = 1
+    degenerates to the standalone rate), else the sort order, segment
+    starts, per-pair Dirichlet shares and per-group degradation factors.
+    Reusable across event steps for as long as the *set* of concurrent
+    pairs is unchanged (rates then vary only through the bandwidth
+    matrices) and shares are persistent.
+    """
+    n = b_idx.size
+    key = b_idx * num_nodes + recv
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    boundary = np.empty(n, dtype=bool)
+    boundary[0] = True
+    np.not_equal(skey[1:], skey[:-1], out=boundary[1:])
+    starts = np.nonzero(boundary)[0]
+    if starts.size == n:
+        return None
+    counts = np.diff(np.append(starts, n))
+    gkey = skey[starts]
+    gb = gkey // num_nodes
+    factor = np.maximum(floor[gb], 1.0 - degrade[gb] * (counts - 1))
+
+    w = np.ones(n)
+    reusable = True
+    for gi in np.nonzero(counts > 1)[0]:
+        b, m = int(gb[gi]), int(counts[gi])
+        v = int(gkey[gi]) % num_nodes
+        ing = ingresses[b]
+        if ing.persistent_shares:
+            ck = (b, v, m)
+        else:
+            ck = (b, v, m, int(epoch[b]))
+            reusable = False     # shares re-drawn per epoch: don't reuse
+        ww = wcache.get(ck)
+        if ww is None:
+            ww = ing.share_weights(m, v, int(epoch[b]))
+            wcache[ck] = ww
+        w[starts[gi]: starts[gi] + m] = ww
+    return order, starts, counts, factor, w, reusable
+
+
+def _contended_rates_grouped(structure, standalone: np.ndarray) -> np.ndarray:
+    """Apply a precomputed fan-in grouping to current standalone rates.
+
+    Same arithmetic as `IngressModel.effective_rates` per group:
+    cap = max(group) * factor(m), eff = min(standalone, share * cap).
+    """
+    if structure is None:
+        return standalone
+    order, starts, counts, factor, w, _ = structure
+    sval = standalone[order]
+    cap = np.maximum.reduceat(sval, starts) * factor
+    eff = np.empty(sval.size)
+    eff[order] = np.minimum(sval, w * np.repeat(cap, counts))
+    return eff
+
+
+# ------------------------------------------------------------- round engine
+def execute_round_batch(
+    hop_u: np.ndarray,           # (B, T, H) int, -1 padded
+    hop_v: np.ndarray,           # (B, T, H) int
+    n_hops: np.ndarray,          # (B, T) int — 0 marks padding transfers
+    t0: np.ndarray,              # (B,) float
+    bb: _BatchBandwidth,
+    ingresses,
+    chunk_mb: np.ndarray,        # (B,) float
+    wcache: dict,
+    degrade: np.ndarray,
+    floor: np.ndarray,
+) -> np.ndarray:
+    """Advance every case until all its round transfers complete.
+
+    The masked-array twin of `simulator.execute_round`: one iteration =
+    one event (hop completion or epoch flip) *per active case*, all cases
+    stepping concurrently, each by its own `dt`.
+    """
+    B, T, _ = hop_u.shape
+    num_nodes = bb.stack.shape[1]
+    t = np.asarray(t0, dtype=float).copy()
+    if T == 0:
+        return t
+    hop_i = np.zeros((B, T), dtype=np.int64)
+    left = np.broadcast_to(chunk_mb[:, None], (B, T)).copy()
+    chunk_col = chunk_mb[:, None]
+    eps_chunk = _EPS * chunk_col
+    done = (hop_i >= n_hops).all(axis=1)
+    iters = 0
+    rates = np.zeros((B, T))
+    cand = np.empty((B, T))
+    # the (case, transfer) -> current-hop structure only changes when a hop
+    # completes; between completions (i.e. across pure epoch-flip events)
+    # the fan-in grouping and Dirichlet shares are reused as-is
+    pairs_dirty = True
+    act = bi = ti = u = v = structure = None
+
+    while not done.all():
+        iters += 1
+        if iters > _GUARD:
+            raise RuntimeError("simulator failed to converge")
+        bb.refresh(t, ~done)
+        if pairs_dirty:
+            act = (hop_i < n_hops) & ~done[:, None]
+            bi, ti = np.nonzero(act)         # row-major: per-case transfer order
+            h = hop_i[bi, ti]
+            u = hop_u[bi, ti, h]
+            v = hop_v[bi, ti, h]
+            structure = _group_structure(
+                bi, v, bb.epoch, num_nodes, ingresses, degrade, floor, wcache)
+            # non-persistent shares are epoch-keyed: rebuild every event
+            pairs_dirty = structure is not None and not structure[5]
+        eff = _contended_rates_grouped(structure, bb.stack[bi, u, v])
+        rates.fill(0.0)
+        rates[bi, ti] = np.maximum(eff, 0.0)
+
+        cand.fill(np.inf)
+        np.divide(left, rates, out=cand, where=act & (rates > 0))
+        dt = np.minimum(bb.epoch_end - t, cand.min(axis=1))
+        dt[~np.isfinite(dt) | (dt <= 0)] = _EPS
+        dt[done] = 0.0
+
+        rates *= dt[:, None]
+        np.subtract(left, rates, out=left, where=act)
+        t += dt
+        compl = act & (left <= eps_chunk)
+        if compl.any():
+            hop_i += compl
+            np.copyto(left, chunk_col, where=compl)
+            done = (hop_i >= n_hops).all(axis=1)
+            pairs_dirty = True
+    return t
+
+
+def _hops_from_rounds(rounds: list[Round]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad one round's transfers (per case) into (B, T, H) hop arrays."""
+    B = len(rounds)
+    T = max((len(r.transfers) for r in rounds), default=0)
+    H = max((len(tr.path) - 1 for r in rounds for tr in r.transfers),
+            default=1)
+    hop_u = np.full((B, max(T, 1), max(H, 1)), -1, dtype=np.int64)
+    hop_v = np.full_like(hop_u, -1)
+    n_hops = np.zeros((B, max(T, 1)), dtype=np.int64)
+    for b, rnd in enumerate(rounds):
+        for i, tr in enumerate(rnd.transfers):
+            nh = len(tr.path) - 1
+            hop_u[b, i, :nh] = tr.path[:-1]
+            hop_v[b, i, :nh] = tr.path[1:]
+            n_hops[b, i] = nh
+    # padding hops index node 0 so fancy-indexing stays in bounds; they are
+    # masked out by n_hops == 0 / hop_i >= n_hops before any rate math
+    np.maximum(hop_u, 0, out=hop_u)
+    np.maximum(hop_v, 0, out=hop_v)
+    return hop_u, hop_v, n_hops
+
+
+# ---------------------------------------------------------- pipeline engine
+@dataclasses.dataclass
+class _PipelinePrep:
+    tree: object
+    t_start: float
+    plan_clock: float
+
+
+def execute_pipeline_batch(
+    child: np.ndarray,           # (B, E) int — 0-padded, dead via left == 0
+    parent: np.ndarray,          # (B, E) int
+    depth: np.ndarray,           # (B, E) int — child-node depth, 0 on padding
+    edge_valid: np.ndarray,      # (B, E) bool
+    t0: np.ndarray,              # (B,) float
+    bb: _BatchBandwidth,
+    ingresses,
+    chunk_mb: np.ndarray,        # (B,) float
+    wcache: dict,
+    degrade: np.ndarray,
+    floor: np.ndarray,
+    duplex: np.ndarray,          # (B,) float
+) -> np.ndarray:
+    """Masked-array twin of `simulator.execute_pipeline`'s event loop.
+
+    The recursive `supply_rate` (slowest live edge in the subtree feeding
+    each node) is an iterative topological min-scan: edges are processed
+    by descending child depth, scattering each edge's effective rate into
+    its parent's supply cell with `np.minimum.at`.
+    """
+    B, E = child.shape
+    num_nodes = bb.stack.shape[1]
+    t = np.asarray(t0, dtype=float).copy()
+    left = np.where(edge_valid, chunk_mb[:, None], 0.0)
+    live = left > _EPS * chunk_mb[:, None]
+    iters = np.zeros(B, dtype=np.int64)
+    dmax = int(depth.max()) if depth.size else 0
+    # live-edge structure (fan-in groups, duplex factors) changes only
+    # when an edge drains; reuse it across pure epoch-flip events
+    edges_dirty = True
+    bi = ei = c = p = structure = rx_dup = tx_dup = None
+
+    while live.any():
+        case_on = live.any(axis=1)
+        iters[case_on] += 1
+        if iters.max() > _GUARD:
+            raise RuntimeError("pipeline simulation failed to converge")
+        bb.refresh(t, case_on)
+
+        if edges_dirty:
+            bi, ei = np.nonzero(live)        # row-major: per-case edge order
+            c = child[bi, ei]
+            p = parent[bi, ei]
+            # rx fan-in contention at each parent; tx groups are singletons
+            structure = _group_structure(
+                bi, p, bb.epoch, num_nodes, ingresses, degrade, floor, wcache)
+            has_rx = np.zeros((B, num_nodes), dtype=bool)
+            has_rx[bi, p] = True
+            has_tx = np.zeros((B, num_nodes), dtype=bool)
+            has_tx[bi, c] = True
+            rx_dup = np.where(has_tx[bi, p], duplex[bi], 1.0)
+            tx_dup = np.where(has_rx[bi, c], duplex[bi], 1.0)
+            edges_dirty = structure is not None and not structure[5]
+        s = bb.stack[bi, c, p]
+        rx_alloc = _contended_rates_grouped(structure, s) * rx_dup
+        tx_alloc = s * tx_dup
+        raw = np.minimum(np.maximum(rx_alloc, 0.0), np.maximum(tx_alloc, 0.0))
+        raw_full = np.zeros((B, E))
+        raw_full[bi, ei] = raw
+
+        # iterative topological min-scan, deepest edges first
+        node_supply = np.full((B, num_nodes), np.inf)
+        eff_edge = raw_full.copy()
+        for d in range(dmax, 0, -1):
+            sel = live & (depth == d)
+            if not sel.any():
+                continue
+            sb, se = np.nonzero(sel)
+            val = np.minimum(raw_full[sb, se],
+                             node_supply[sb, child[sb, se]])
+            eff_edge[sb, se] = val
+            np.minimum.at(node_supply, (sb, parent[sb, se]), val)
+        rates = np.where(live, eff_edge, 0.0)
+
+        cand = np.full((B, E), np.inf)
+        np.divide(left, rates, out=cand, where=live & (rates > 0))
+        dt = np.minimum(bb.epoch_end - t, cand.min(axis=1))
+        dt = np.where(~np.isfinite(dt) | (dt <= 0), _EPS, dt)
+        dt = np.where(case_on, dt, 0.0)
+
+        left = np.where(live, left - rates * dt[:, None], left)
+        t = t + dt
+        new_live = left > _EPS * chunk_mb[:, None]
+        if not np.array_equal(new_live, live):
+            edges_dirty = True
+        live = new_live
+    return t
+
+
+# ----------------------------------------------------------- batched scheme
+def _ingress_params(scenarios):
+    degrade = np.array([sc.ingress.degrade for sc in scenarios], dtype=float)
+    floor = np.array([sc.ingress.floor for sc in scenarios], dtype=float)
+    duplex = np.array([sc.ingress.duplex for sc in scenarios], dtype=float)
+    return degrade, floor, duplex
+
+
+def _chunk_array(scenarios) -> np.ndarray:
+    # chunk_mb may arrive as python ints (benchmark grids use [8, 16, 32]);
+    # the batched state math must stay float64
+    return np.array([sc.chunk_mb for sc in scenarios], dtype=float)
+
+
+def _run_ppt_batch(scenarios: list[Scenario]) -> list[SimResult]:
+    B = len(scenarios)
+    num_nodes = max(sc.num_nodes for sc in scenarios)
+    preps: list[_PipelinePrep] = []
+    for sc in scenarios:
+        tic = _time.perf_counter()
+        tree = build_ppt_tree(sc.make_jobs()[0], sc.bw.matrix_at(0.0))
+        plan_clock = _time.perf_counter() - tic
+        t_start = pipeline_fill_latency(tree, sc.bw.matrix_at(0.0),
+                                        sc.chunk_mb)
+        preps.append(_PipelinePrep(tree=tree, t_start=t_start,
+                                   plan_clock=plan_clock))
+
+    E = max(len(p.tree.parent) for p in preps)
+    child = np.zeros((B, E), dtype=np.int64)
+    parent = np.zeros((B, E), dtype=np.int64)
+    depth_arr = np.zeros((B, E), dtype=np.int64)
+    edge_valid = np.zeros((B, E), dtype=bool)
+    for b, p in enumerate(preps):
+        depths = p.tree.depths()
+        for e, (c, par) in enumerate(p.tree.parent.items()):
+            child[b, e] = c
+            parent[b, e] = par
+            depth_arr[b, e] = depths[c]
+            edge_valid[b, e] = True
+
+    bb = _BatchBandwidth([sc.bw for sc in scenarios], num_nodes)
+    degrade, floor, duplex = _ingress_params(scenarios)
+    chunk = _chunk_array(scenarios)
+    t0 = np.array([p.t_start for p in preps])
+    t_end = execute_pipeline_batch(
+        child, parent, depth_arr, edge_valid, t0, bb,
+        [sc.ingress for sc in scenarios], chunk, {}, degrade, floor, duplex,
+    )
+    return [
+        SimResult(
+            scheme="ppt", total_time=float(t_end[b]),
+            round_times=[float(t_end[b])], planning_time=preps[b].plan_clock,
+            plan=None, log=[f"ppt tree edges={preps[b].tree.edges}"],
+        )
+        for b in range(B)
+    ]
+
+
+def _run_rounds_batch(
+    scenarios: list[Scenario],
+    scheme: str,
+    plans: list[RepairPlan],
+    arrays: list[PlanArrays],
+    jobs_list,
+    plan_clocks: list[float],
+    *,
+    bmf_optimize_all: bool,
+) -> list[SimResult]:
+    B = len(scenarios)
+    R = plans[0].num_rounds
+    num_nodes = max(max(sc.num_nodes, pa.num_nodes)
+                    for sc, pa in zip(scenarios, arrays))
+    use_bmf = scheme in ("bmf", "msrepair", "bmf_static")
+    static_plan_time = scheme == "bmf_static"
+
+    bb = _BatchBandwidth([sc.bw for sc in scenarios], num_nodes)
+    degrade, floor, _ = _ingress_params(scenarios)
+    ingresses = [sc.ingress for sc in scenarios]
+    chunk = _chunk_array(scenarios)
+    wcache: dict = {}
+
+    t = np.zeros(B)
+    round_times: list[list[float]] = [[] for _ in range(B)]
+    relay_hops = [0] * B
+    logs: list[list[str]] = [[] for _ in range(B)]
+    executed: list[list[Round]] = [[] for _ in range(B)]
+    plan_clock = list(plan_clocks)
+
+    for r in range(R):
+        rounds_b: list[Round] = []
+        for b in range(B):
+            rnd = plans[b].rounds[r]
+            if use_bmf:
+                sc = scenarios[b]
+                tic = _time.perf_counter()
+                bw_now = sc.bw.matrix_at(0.0 if static_plan_time
+                                         else float(t[b]))
+                idle = [x for x in _idle_pool(sc, jobs_list[b])
+                        if x not in rnd.nodes_in_use()]
+                rnd, stats = bmf.optimize_round(
+                    rnd, bw_now, idle, sc.chunk_mb,
+                    optimize_all=bmf_optimize_all,
+                )
+                plan_clock[b] += _time.perf_counter() - tic
+                relay_hops[b] += sum(len(tr.relays) for tr in rnd.transfers)
+                if stats.improved_links:
+                    logs[b].append(
+                        f"t={float(t[b]):.2f}s round {r}: BMF rerouted "
+                        f"{stats.improved_links} link(s), "
+                        f"est -{stats.time_saved:.2f}s"
+                    )
+            rounds_b.append(rnd)
+            executed[b].append(rnd)
+
+        if use_bmf:
+            hop_u, hop_v, n_hops = _hops_from_rounds(rounds_b)
+        else:
+            # offline schemes execute the compiled plan arrays directly
+            per = [pa.round_hops(r) for pa in arrays]
+            T = max(p[0].shape[0] for p in per)
+            H = max(p[0].shape[1] for p in per)
+            hop_u = np.zeros((B, max(T, 1), max(H, 1)), dtype=np.int64)
+            hop_v = np.zeros_like(hop_u)
+            n_hops = np.zeros((B, max(T, 1)), dtype=np.int64)
+            for b, (hu, hv, nh) in enumerate(per):
+                hop_u[b, : hu.shape[0], : hu.shape[1]] = np.maximum(hu, 0)
+                hop_v[b, : hv.shape[0], : hv.shape[1]] = np.maximum(hv, 0)
+                n_hops[b, : nh.shape[0]] = nh
+        t_end = execute_round_batch(
+            hop_u, hop_v, n_hops, t, bb, ingresses, chunk,
+            wcache, degrade, floor,
+        )
+        for b in range(B):
+            round_times[b].append(float(t_end[b] - t[b]))
+        t = t_end
+
+    return [
+        SimResult(
+            scheme=scheme, total_time=float(t[b]),
+            round_times=round_times[b], planning_time=plan_clock[b],
+            plan=RepairPlan(jobs=plans[b].jobs, rounds=executed[b],
+                            meta=plans[b].meta),
+            relay_hops=relay_hops[b], log=logs[b],
+        )
+        for b in range(B)
+    ]
+
+
+def run_scheme_vectorized(
+    scenarios: list[Scenario],
+    scheme: str,
+    *,
+    seeds: list[int] | None = None,
+    bmf_optimize_all: bool = False,
+) -> list[SimResult]:
+    """Batched `run_scheme`: plan per case, execute in compatible batches.
+
+    Cases are grouped by (cluster size, round count) — the structural
+    compatibility the lockstep stepper needs — and each group runs through
+    the batched engine; a case whose plan cannot be lowered to arrays
+    falls back to the object engine. Results are returned in input order
+    and match `run_scheme` case for case (modulo wall-clock
+    `planning_time`). Because identical planner inputs are deduplicated,
+    the returned `SimResult.plan`s may share objects across cases — copy
+    before mutating (`run_sweep(keep_plans=True)` does this for you).
+    """
+    seeds = list(seeds) if seeds is not None else [0] * len(scenarios)
+    if len(seeds) != len(scenarios):
+        raise ValueError("seeds must match scenarios")
+    results: list[SimResult | None] = [None] * len(scenarios)
+
+    if scheme == "ppt":
+        groups: dict[tuple, list[int]] = {}
+        for i, sc in enumerate(scenarios):
+            groups.setdefault((sc.num_nodes,), []).append(i)
+        for idxs in groups.values():
+            for i, r in zip(idxs, _run_ppt_batch([scenarios[i] for i in idxs])):
+                results[i] = r
+        return results
+
+    prepared: dict[int, tuple] = {}
+    fallback: list[int] = []
+    # identical planner inputs yield identical plans — compile and validate
+    # each distinct (jobs, seed) once per batch. The cached plan's full
+    # planning cost is charged to every case sharing it (planning_time
+    # reports what a standalone run of that case would spend).
+    plan_cache: dict[tuple, tuple | None] = {}
+    for i, sc in enumerate(scenarios):
+        jobs = sc.make_jobs()
+        key = (
+            tuple((j.job_id, j.failed_node, j.requestor, j.helpers)
+                  for j in jobs),
+            seeds[i] if scheme == "random" else None,
+        )
+        hit = plan_cache.get(key, _MISSING)
+        if hit is _MISSING:
+            tic = _time.perf_counter()
+            plan = plan_for_scheme(scheme, jobs, random_seed=seeds[i])
+            clock = _time.perf_counter() - tic
+            try:
+                pa = compile_plan(plan)
+            except UnsupportedPlanError:
+                plan_cache[key] = None
+                fallback.append(i)
+                continue
+            validate_plan_arrays(
+                pa, max_recv_per_round=len(jobs[0].helpers)
+                if scheme == "traditional" else 1,
+            )
+            hit = (plan, pa, clock)
+            plan_cache[key] = hit
+        elif hit is None:
+            fallback.append(i)
+            continue
+        plan, pa, clock = hit
+        prepared[i] = (jobs, plan, pa, clock)
+
+    groups: dict[tuple, list[int]] = {}
+    for i, (_, plan, _, _) in prepared.items():
+        groups.setdefault((scenarios[i].num_nodes, plan.num_rounds),
+                          []).append(i)
+    for idxs in groups.values():
+        sims = _run_rounds_batch(
+            [scenarios[i] for i in idxs], scheme,
+            [prepared[i][1] for i in idxs],
+            [prepared[i][2] for i in idxs],
+            [prepared[i][0] for i in idxs],
+            [prepared[i][3] for i in idxs],
+            bmf_optimize_all=bmf_optimize_all,
+        )
+        for i, r in zip(idxs, sims):
+            results[i] = r
+    for i in fallback:
+        results[i] = run_scheme(
+            scenarios[i], scheme,
+            bmf_optimize_all=bmf_optimize_all, random_seed=seeds[i],
+        )
+    return results

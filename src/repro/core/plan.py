@@ -111,7 +111,13 @@ class FragmentState:
         return all(self.job_done(j) for j in self.jobs)
 
 
-def validate_plan(plan: RepairPlan, *, max_recv_per_round: int = 1) -> None:
+# below this many transfers the object walk beats array compilation; the
+# array fast path pays off on large (batched / machine-generated) plans
+_FAST_VALIDATE_MIN_TRANSFERS = 64
+
+
+def validate_plan(plan: RepairPlan, *, max_recv_per_round: int = 1,
+                  fast: bool | None = None) -> None:
     """Structural invariants from the paper's constraints.
 
     * every transfer's payload is actually held at its source,
@@ -120,7 +126,30 @@ def validate_plan(plan: RepairPlan, *, max_recv_per_round: int = 1) -> None:
       relaxes receiving for fan-in schemes like traditional repair),
     * relays are used at most once per round and are not senders/receivers,
     * after the last round every job's requestor holds the full term set.
+
+    Large plans take the array fast path (whole-plan bincount role checks
+    + uint64 term-bitmask bookkeeping, see
+    `repro.core.engine.arrays.validate_plan_arrays`); small plans, plans
+    that cannot be lowered (helper/term ids >= 64), and `fast=False` use the
+    object walk below. Both paths enforce identical invariants. Callers
+    that already hold compiled `PlanArrays` (the vectorized engine)
+    should call `validate_plan_arrays` directly and skip the re-compile.
     """
+    if fast is None:
+        fast = (sum(len(r.transfers) for r in plan.rounds)
+                >= _FAST_VALIDATE_MIN_TRANSFERS)
+    if fast:
+        from repro.core.engine.arrays import (UnsupportedPlanError,
+                                              compile_plan,
+                                              validate_plan_arrays)
+
+        try:
+            arrays = compile_plan(plan)
+        except UnsupportedPlanError:
+            pass
+        else:
+            validate_plan_arrays(arrays, max_recv_per_round=max_recv_per_round)
+            return
     state = FragmentState(plan.jobs)
     for rnd in plan.rounds:
         send_count: dict[int, int] = defaultdict(int)

@@ -29,6 +29,17 @@ class PPTTree:
     def edges(self) -> list[tuple[int, int]]:
         return [(c, p) for c, p in self.parent.items()]
 
+    def depths(self) -> dict[int, int]:
+        """Hop distance of every tree node from the requestor root."""
+        out: dict[int, int] = {}
+        for node in self.parent:
+            d, cur = 0, node
+            while cur != self.job.requestor:
+                cur = self.parent[cur]
+                d += 1
+            out[node] = d
+        return out
+
     def assumed_bottleneck(self, bw: np.ndarray) -> float:
         bn = float("inf")
         for c, p in self.parent.items():

@@ -85,47 +85,68 @@ def execute_round(
     ingress: IngressModel,
     chunk_mb: float,
 ) -> float:
-    """Advance simulated time until all transfers of a round complete."""
-    state = [
-        {"hops": list(zip(t.path[:-1], t.path[1:])), "hop": 0, "left": chunk_mb}
-        for t in transfers
-    ]
+    """Advance simulated time until all transfers of a round complete.
+
+    State is index-based (parallel lists over the transfer index), the
+    scalar sibling of the batched `(B, T)` arrays in
+    `repro.core.engine.vectorized.execute_round_batch`.
+    """
+    hops = [list(zip(tr.path[:-1], tr.path[1:])) for tr in transfers]
+    n_hops = [len(h) for h in hops]
+    hop = [0] * len(transfers)
+    left = [chunk_mb] * len(transfers)
     t = t0
     guard = 0
-    while any(s["hop"] < len(s["hops"]) for s in state):
+    while any(hop[i] < n_hops[i] for i in range(len(transfers))):
         guard += 1
         if guard > 100_000:
             raise RuntimeError("simulator failed to converge")
         bw = bwp.matrix_at(t)
         epoch = bwp.epoch_of(t)
-        active = [s for s in state if s["hop"] < len(s["hops"])]
+        active = [i for i in range(len(transfers)) if hop[i] < n_hops[i]]
         # fan-in contention per receiver (Fig. 2 model)
-        by_recv: dict[int, list] = {}
-        for s in active:
-            u, v = s["hops"][s["hop"]]
-            by_recv.setdefault(v, []).append((s, u))
-        rates: dict[int, float] = {}
+        by_recv: dict[int, list[int]] = {}
+        for i in active:
+            _, v = hops[i][hop[i]]
+            by_recv.setdefault(v, []).append(i)
+        rates = [0.0] * len(transfers)
         for v, senders in by_recv.items():
-            standalone = np.array([bw[u, v] for (_, u) in senders])
+            standalone = np.array([bw[hops[i][hop[i]][0], v] for i in senders])
             eff = ingress.effective_rates(standalone, v, epoch)
-            for (s, _), r in zip(senders, eff):
-                rates[id(s)] = max(float(r), 0.0)
+            for i, r in zip(senders, eff):
+                rates[i] = max(float(r), 0.0)
         # next event: a hop completes or the bandwidth epoch flips
         dt = bwp.epoch_end(t) - t
-        for s in active:
-            r = rates[id(s)]
-            if r > 0:
-                dt = min(dt, s["left"] / r)
+        for i in active:
+            if rates[i] > 0:
+                dt = min(dt, left[i] / rates[i])
         if not np.isfinite(dt) or dt <= 0:
-            dt = max(dt, _EPS)
-        for s in active:
-            s["left"] -= rates[id(s)] * dt
+            dt = _EPS      # e.g. an all-zero-bandwidth epoch: creep, don't
+            #                keep dt = inf (which poisoned left with NaN)
+        for i in active:
+            left[i] -= rates[i] * dt
         t += dt
-        for s in active:
-            if s["left"] <= _EPS * chunk_mb:
-                s["hop"] += 1          # store-and-forward: next hop restarts
-                s["left"] = chunk_mb
+        for i in active:
+            if left[i] <= _EPS * chunk_mb:
+                hop[i] += 1            # store-and-forward: next hop restarts
+                left[i] = chunk_mb
     return t
+
+
+def pipeline_fill_latency(
+    tree: PPTTree,
+    bw0: np.ndarray,
+    chunk_mb: float,
+    slice_frac: float = 1.0 / 32.0,
+) -> float:
+    """Pipeline-fill latency of PPT's deepest path at the t=0 snapshot.
+
+    Shared by `execute_pipeline` and the batched engine
+    (`repro.core.engine.vectorized`) so the two stay expression-identical.
+    """
+    depth = max(tree.depths().values(), default=0)
+    bn0 = max(tree.assumed_bottleneck(bw0), _EPS)
+    return (depth - 1) * (chunk_mb * slice_frac) / bn0 if depth > 1 else 0.0
 
 
 def execute_pipeline(
@@ -152,16 +173,7 @@ def execute_pipeline(
     for c, p in edges:
         children.setdefault(p, []).append(c)
     # pipeline fill latency: deepest path at the initial snapshot
-    bw0 = bwp.matrix_at(t0)
-    depth = 0
-    for node in tree.parent:
-        d, cur = 0, node
-        while cur != tree.job.requestor:
-            cur = tree.parent[cur]
-            d += 1
-        depth = max(depth, d)
-    bn0 = max(tree.assumed_bottleneck(bw0), _EPS)
-    t += (depth - 1) * (chunk_mb * slice_frac) / bn0 if depth > 1 else 0.0
+    t += pipeline_fill_latency(tree, bwp.matrix_at(t0), chunk_mb, slice_frac)
 
     guard = 0
     while any(v > _EPS * chunk_mb for v in left.values()):

@@ -15,6 +15,7 @@ avoided.
 from __future__ import annotations
 
 import concurrent.futures
+import copy
 import dataclasses
 import multiprocessing
 import os
@@ -219,8 +220,10 @@ def run_sweep(
 
     `schemes` overrides both the suite default and per-case scheme sets;
     otherwise each case runs `case.schemes or suite.schemes`. Executors:
-    "serial", "thread", "process" or "auto" (process pool for >= 8 cases
-    on a multi-core host). Output is independent of the executor choice.
+    "serial", "thread", "process", "vectorized" (batched array engine —
+    compatible cases step through `repro.core.engine` together) or "auto"
+    (process pool for >= 8 cases on a multi-core host). Output is
+    independent of the executor choice.
     """
     cases = list(suite.cases())
     work = [
@@ -234,7 +237,9 @@ def run_sweep(
         for case, case_schemes in work:
             yield case, case_schemes, keep_plans, bmf_optimize_all
 
-    if mode == "serial":
+    if mode == "vectorized":
+        results = _run_vectorized(work, keep_plans, bmf_optimize_all)
+    elif mode == "serial":
         results = [_run_case(*args) for args in jobs()]
     elif mode == "thread":
         with concurrent.futures.ThreadPoolExecutor(max_workers=max_workers) as pool:
@@ -260,3 +265,48 @@ def run_sweep(
 
 def _run_case_star(args) -> CaseResult:
     return _run_case(*args)
+
+
+def _run_vectorized(
+    work: list[tuple[ScenarioCase, tuple[str, ...]]],
+    keep_plans: bool,
+    bmf_optimize_all: bool,
+) -> list[CaseResult]:
+    """Dispatch work through the batched array engine, scheme by scheme.
+
+    Cases sharing a scheme are handed to `run_scheme_vectorized`, which
+    groups them into structurally compatible batches (same cluster size
+    and round count) and falls back to the object engine per case when a
+    plan cannot be lowered to arrays. Results are identical to the serial
+    executor (the engine parity tests pin this), only wall-clock changes.
+    """
+    from repro.core.engine.vectorized import run_scheme_vectorized
+
+    per_scheme: dict[str, list[int]] = {}
+    for pos, (_, case_schemes) in enumerate(work):
+        for s in case_schemes:
+            per_scheme.setdefault(s, []).append(pos)
+
+    by_pos: list[dict[str, SimResult]] = [{} for _ in work]
+    for scheme, positions in per_scheme.items():
+        sims = run_scheme_vectorized(
+            [work[p][0].scenario for p in positions], scheme,
+            seeds=[work[p][0].seed for p in positions],
+            bmf_optimize_all=bmf_optimize_all,
+        )
+        for p, r in zip(positions, sims):
+            if keep_plans:
+                # the engine dedupes identical planner inputs, so kept
+                # plans may share objects across cases — give each case
+                # its own copy to match serial-executor ownership
+                r = dataclasses.replace(r, plan=copy.deepcopy(r.plan))
+            else:
+                r = _strip(r)
+            by_pos[p][scheme] = r
+    return [
+        CaseResult(
+            index=case.index, seed=case.seed, params=dict(case.params),
+            results={s: by_pos[pos][s] for s in case_schemes},
+        )
+        for pos, (case, case_schemes) in enumerate(work)
+    ]

@@ -1,0 +1,231 @@
+"""Plan-array IR: exact compile/decompile round-trips, array-vs-object
+validation equivalence, and `validate_plan` edge cases."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import bmf, topology
+from repro.core.engine.arrays import (UnsupportedPlanError, compile_plan,
+                                      decompile, validate_plan_arrays)
+from repro.core.msrepair import (plan_mppr, plan_msrepair, plan_random,
+                                 select_helpers_multi)
+from repro.core.plan import Job, RepairPlan, Round, Transfer, validate_plan
+from repro.core.ppr import plan_ppr, plan_traditional
+
+
+def _single_job(n, k, failed=0):
+    helpers = tuple(x for x in range(n) if x != failed)[:k]
+    return Job(job_id=0, failed_node=failed, requestor=failed, helpers=helpers)
+
+
+def _multi_jobs(n, k, failed):
+    helper_sets = select_helpers_multi(n, k, list(failed))
+    return [Job(job_id=i, failed_node=f, requestor=f, helpers=helper_sets[i])
+            for i, f in enumerate(failed)]
+
+
+def _all_planner_outputs():
+    """One plan per planner across a few shapes (incl. BMF-relayed paths)."""
+    plans = []
+    for n, k in [(4, 2), (6, 3), (7, 4), (9, 6), (12, 8)]:
+        job = _single_job(n, k)
+        plans.append(plan_ppr(job))
+        plans.append(plan_traditional(job))
+    for n, k, failed in [(7, 4, (0, 1)), (9, 6, (0, 1, 2)), (6, 3, (2, 5))]:
+        jobs = _multi_jobs(n, k, failed)
+        plans.append(plan_mppr(jobs))
+        plans.append(plan_msrepair(jobs))
+        for seed in (0, 3):
+            plans.append(plan_random(jobs, seed=seed))
+    # BMF-optimized rounds carry store-and-forward relay paths (len > 2)
+    for seed in range(4):
+        job = _single_job(7, 4)
+        plan = plan_ppr(job)
+        bw = topology.heterogeneous_matrix(12, low=1, high=30, seed=seed)
+        idle = list(range(7, 12))
+        rounds = [
+            bmf.optimize_round(r, bw, [x for x in idle], 16.0)[0]
+            for r in plan.rounds
+        ]
+        plans.append(RepairPlan(jobs=plan.jobs, rounds=rounds,
+                                meta={"scheme": "bmf", "seed": seed}))
+    return plans
+
+
+# ----------------------------------------------------------- round-tripping
+def test_compile_decompile_roundtrips_every_planner_exactly():
+    plans = _all_planner_outputs()
+    assert any(len(t.path) > 2 for p in plans for t in p.all_transfers()), \
+        "fixture must include relayed paths"
+    for plan in plans:
+        pa = compile_plan(plan)
+        back = decompile(pa)
+        assert back == plan           # dataclass equality: jobs, rounds, meta
+        # and the structural metadata is consistent
+        assert pa.num_rounds == plan.num_rounds
+        assert pa.num_transfers == len(plan.all_transfers())
+        assert pa.num_jobs == len(plan.jobs)
+
+
+def test_round_hops_matches_paths():
+    plan = _all_planner_outputs()[-1]
+    pa = compile_plan(plan)
+    for r, rnd in enumerate(plan.rounds):
+        hop_u, hop_v, n_hops = pa.round_hops(r)
+        for i, tr in enumerate(rnd.transfers):
+            nh = int(n_hops[i])
+            assert nh == len(tr.path) - 1
+            hops = list(zip(tr.path[:-1], tr.path[1:]))
+            assert [(int(u), int(v)) for u, v in
+                    zip(hop_u[i, :nh], hop_v[i, :nh])] == hops
+
+
+def test_compile_rejects_unmappable_node_ids():
+    job = Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2, 64))
+    plan = RepairPlan(jobs=[job], rounds=[])
+    with pytest.raises(UnsupportedPlanError):
+        compile_plan(plan)
+
+
+# --------------------------------------------- array/object path equivalence
+def test_valid_plans_pass_both_paths():
+    for plan in _all_planner_outputs():
+        max_recv = (len(plan.jobs[0].helpers)
+                    if plan.meta.get("scheme") == "traditional" else 1)
+        validate_plan(plan, max_recv_per_round=max_recv, fast=False)
+        validate_plan(plan, max_recv_per_round=max_recv, fast=True)
+        validate_plan_arrays(compile_plan(plan), max_recv_per_round=max_recv)
+
+
+def _expect_both_paths_reject(plan, match, *, max_recv_per_round=1):
+    with pytest.raises(ValueError, match=match):
+        validate_plan(plan, max_recv_per_round=max_recv_per_round, fast=False)
+    with pytest.raises(ValueError, match=match):
+        validate_plan_arrays(compile_plan(plan),
+                             max_recv_per_round=max_recv_per_round)
+
+
+def _two_jobs():
+    return [
+        Job(job_id=0, failed_node=0, requestor=0, helpers=(2, 3)),
+        Job(job_id=1, failed_node=1, requestor=1, helpers=(4, 5)),
+    ]
+
+
+def test_relay_reused_across_jobs_in_one_round_rejected():
+    jobs = _two_jobs()
+    rnd = Round(transfers=[
+        Transfer(src=2, dst=3, job=0, terms=frozenset({2}), path=(2, 6, 3)),
+        Transfer(src=4, dst=5, job=1, terms=frozenset({4}), path=(4, 6, 5)),
+    ])
+    _expect_both_paths_reject(
+        RepairPlan(jobs=jobs, rounds=[rnd]), match="relay node 6 used 2")
+
+
+def test_stale_fragment_replay_rejected():
+    """A node re-sending a fragment it already forwarded must be caught."""
+    job = Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2, 3))
+    rounds = [
+        Round(transfers=[Transfer(src=1, dst=2, job=0, terms=frozenset({1}))]),
+        Round(transfers=[Transfer(src=1, dst=2, job=0, terms=frozenset({1}))]),
+    ]
+    _expect_both_paths_reject(
+        RepairPlan(jobs=[job], rounds=rounds), match="not matching src")
+
+
+def test_duplicate_term_arrival_rejected():
+    """The XOR-fold duplicate guard (unreachable from canonical initial
+    holdings, where every term exists exactly once — `FragmentState` is
+    the layer that enforces it for injected/replayed state)."""
+    from repro.core.plan import FragmentState
+
+    job = Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2))
+    state = FragmentState([job])
+    state.holdings[0][3] = {1}           # synthetic duplicate of term 1
+    state.apply(Transfer(src=1, dst=0, job=0, terms=frozenset({1})))
+    with pytest.raises(ValueError, match="duplicate terms"):
+        state.apply(Transfer(src=3, dst=0, job=0, terms=frozenset({1})))
+
+
+def test_disjoint_fan_in_accepted_redelivery_rejected():
+    # two sources delivering disjoint term sets to one receiver is the
+    # legal traditional-repair shape (with fan-in relaxed) ...
+    job = Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2))
+    ok = RepairPlan(jobs=[job], rounds=[Round(transfers=[
+        Transfer(src=1, dst=0, job=0, terms=frozenset({1})),
+        Transfer(src=2, dst=0, job=0, terms=frozenset({2})),
+    ])])
+    validate_plan(ok, max_recv_per_round=2, fast=False)
+    validate_plan_arrays(compile_plan(ok), max_recv_per_round=2)
+    # ... but re-delivering an already-forwarded aggregate is not
+    dup = RepairPlan(jobs=[job], rounds=[
+        Round(transfers=[Transfer(src=1, dst=2, job=0, terms=frozenset({1}))]),
+        Round(transfers=[Transfer(src=2, dst=0, job=0, terms=frozenset({1, 2}))]),
+        Round(transfers=[Transfer(src=2, dst=0, job=0, terms=frozenset({1, 2}))]),
+    ])
+    _expect_both_paths_reject(dup, match="not matching src")
+
+
+def test_max_recv_per_round_relaxation():
+    """Traditional star repair is only valid once fan-in is relaxed."""
+    plan = plan_traditional(_single_job(6, 3))
+    k = len(plan.jobs[0].helpers)
+    for fast in (False, True):
+        with pytest.raises(ValueError, match="receives"):
+            validate_plan(plan, max_recv_per_round=1, fast=fast)
+        validate_plan(plan, max_recv_per_round=k, fast=fast)
+    with pytest.raises(ValueError, match="receives"):
+        validate_plan_arrays(compile_plan(plan), max_recv_per_round=k - 1)
+    validate_plan_arrays(compile_plan(plan), max_recv_per_round=k)
+
+
+def test_incomplete_plan_rejected():
+    job = Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2))
+    plan = RepairPlan(jobs=[job], rounds=[
+        Round(transfers=[Transfer(src=1, dst=0, job=0, terms=frozenset({1}))]),
+    ])
+    _expect_both_paths_reject(plan, match="does not complete")
+
+
+def test_role_conflicts_rejected_by_both_paths():
+    jobs = _two_jobs()
+    send_and_recv = RepairPlan(jobs=jobs, rounds=[Round(transfers=[
+        Transfer(src=2, dst=3, job=0, terms=frozenset({2})),
+        Transfer(src=4, dst=2, job=1, terms=frozenset({4}), path=(4, 2)),
+    ])])
+    _expect_both_paths_reject(send_and_recv, match="sends and receives")
+    relay_and_send = RepairPlan(jobs=jobs, rounds=[Round(transfers=[
+        Transfer(src=2, dst=3, job=0, terms=frozenset({2})),
+        Transfer(src=4, dst=5, job=1, terms=frozenset({4}), path=(4, 2, 5)),
+    ])])
+    _expect_both_paths_reject(relay_and_send, match="relay")
+
+
+def test_transfer_post_init_rejects_cycles():
+    with pytest.raises(AssertionError, match="cyclic"):
+        Transfer(src=1, dst=1, job=0, terms=frozenset({1}), path=(1, 2, 1))
+    with pytest.raises(AssertionError, match="cyclic"):
+        Transfer(src=1, dst=3, job=0, terms=frozenset({1}), path=(1, 2, 2, 3))
+    # and endpoints must match the declared path
+    with pytest.raises(AssertionError):
+        Transfer(src=1, dst=3, job=0, terms=frozenset({1}), path=(2, 3))
+
+
+def test_meta_and_helper_order_survive_roundtrip():
+    jobs = [Job(job_id=5, failed_node=1, requestor=1, helpers=(4, 2, 6))]
+    plan = RepairPlan(jobs=jobs, rounds=[
+        Round(transfers=[
+            Transfer(src=4, dst=2, job=5, terms=frozenset({4})),
+        ]),
+        Round(transfers=[
+            Transfer(src=2, dst=6, job=5, terms=frozenset({4, 2})),
+        ]),
+        Round(transfers=[
+            Transfer(src=6, dst=1, job=5, terms=frozenset({4, 2, 6})),
+        ]),
+    ], meta={"scheme": "custom", "note": [1, 2]})
+    back = decompile(compile_plan(plan))
+    assert back == plan
+    assert back.jobs[0].helpers == (4, 2, 6)      # order, not a set
+    assert back.meta == {"scheme": "custom", "note": [1, 2]}

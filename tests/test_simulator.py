@@ -54,6 +54,36 @@ def test_churn_integration_analytic():
     assert abs(t - 2.5) < 1e-6
 
 
+def test_all_zero_bandwidth_epoch_raises_not_hangs():
+    """Regression: with every rate zero and no epoch flip ahead, dt used
+    to stay inf (`max(inf, eps)`), poisoning `left` with NaN via
+    `0 * inf`. The engine must clamp to the epsilon step and fail the
+    convergence guard with a clean error instead."""
+    base = np.zeros((3, 3))
+    bwp = BandwidthProcess(base=base, change_interval=None, min_bw=0.0)
+    assert bwp.matrix_at(0.0).max() == 0.0
+    with pytest.raises(RuntimeError, match="failed to converge"):
+        execute_round([Transfer(src=1, dst=0, job=0, terms=frozenset({1}))],
+                      0.0, bwp, IngressModel(), 16.0)
+
+
+def test_zero_bandwidth_epoch_then_recovery():
+    """A dead epoch (all links zero) must stall cleanly until the next
+    epoch flip, then finish: 2 s dead + 16 MB / 8 MBps = 4 s total."""
+    base = topology.uniform_matrix(3, 8.0)
+
+    class DeadFirstEpoch(BandwidthProcess):
+        def matrix_at(self, t):
+            if self.epoch_of(t) < 1:
+                return np.zeros_like(self.base)
+            return self.base
+
+    bwp = DeadFirstEpoch(base=base, change_interval=2.0, jitter=0.0)
+    t = execute_round([Transfer(src=1, dst=0, job=0, terms=frozenset({1}))],
+                      0.0, bwp, IngressModel(), 16.0)
+    assert abs(t - 4.0) < 1e-6
+
+
 def test_relay_store_and_forward_sums_hops():
     m = topology.uniform_matrix(4, 8.0)
     bwp = BandwidthProcess(base=m, change_interval=None)

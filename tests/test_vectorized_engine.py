@@ -1,0 +1,184 @@
+"""Vectorized engine parity: the batched array steppers must reproduce the
+object-based reference engine case for case, across every scheme."""
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.bandwidth import BandwidthProcess, BandwidthTrace, IngressModel
+from repro.core.engine.vectorized import run_scheme_vectorized
+from repro.core.simulator import (ALL_SCHEMES, Scenario, run_scheme)
+from repro.ec.rs import RSCode
+from repro.sim.suite import MonteCarloSuite, SampleSpace, TraceSuite
+from repro.sim.sweep import run_sweep
+
+RTOL = 1e-6
+
+
+def _scenario(n=6, k=3, failed=(0,), seed=0, cluster=8, chunk=8.0,
+              interval=2.0, mode="markov"):
+    m = topology.heterogeneous_matrix(cluster, low=3, high=30, seed=seed)
+    bwp = BandwidthProcess(base=m, change_interval=interval, seed=seed,
+                           mode=mode)
+    return Scenario(num_nodes=cluster, code=RSCode(n, k), failed=failed,
+                    bw=bwp, ingress=IngressModel(seed=seed), chunk_mb=chunk)
+
+
+def _assert_result_parity(ref, got, label=""):
+    assert got.num_rounds == ref.num_rounds, label
+    assert got.relay_hops == ref.relay_hops, label
+    assert got.total_time == pytest.approx(ref.total_time, rel=RTOL), label
+    for a, b in zip(ref.round_times, got.round_times):
+        assert b == pytest.approx(a, rel=RTOL, abs=1e-9), label
+
+
+# ------------------------------------------------------ per-scheme batches
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_scheme_batch_matches_reference(scheme):
+    failed = (0, 1) if scheme in ("mppr", "random", "msrepair") else (0,)
+    seeds = list(range(8))
+    scs = [_scenario(n=7, k=4, failed=failed, seed=s, cluster=10)
+           for s in seeds]
+    ref = [run_scheme(sc, scheme, random_seed=s)
+           for s, sc in zip(seeds, scs)]
+    got = run_scheme_vectorized(scs, scheme, seeds=seeds)
+    for s, (a, b) in enumerate(zip(ref, got)):
+        _assert_result_parity(a, b, f"{scheme} seed={s}")
+        assert b.log == a.log, f"{scheme} seed={s}"
+        assert b.plan == a.plan, f"{scheme} seed={s}"
+
+
+def test_bmf_optimize_all_parity():
+    scs = [_scenario(n=6, k=3, seed=s, cluster=10) for s in range(4)]
+    ref = [run_scheme(sc, "bmf", bmf_optimize_all=True) for sc in scs]
+    got = run_scheme_vectorized(scs, "bmf", bmf_optimize_all=True)
+    for a, b in zip(ref, got):
+        _assert_result_parity(a, b, "bmf optimize_all")
+
+
+def test_static_network_and_trace_parity():
+    static = [_scenario(seed=s, interval=None) for s in range(3)]
+    for scheme in ("ppr", "bmf", "ppt"):
+        for a, b in zip([run_scheme(sc, scheme) for sc in static],
+                        run_scheme_vectorized(static, scheme)):
+            _assert_result_parity(a, b, f"static {scheme}")
+    traced = [
+        Scenario(
+            num_nodes=sc.num_nodes, code=sc.code, failed=sc.failed,
+            bw=BandwidthTrace.record(sc.bw, 64), ingress=sc.ingress,
+            chunk_mb=sc.chunk_mb,
+        )
+        for sc in (_scenario(seed=s) for s in range(4))
+    ]
+    for scheme in ("traditional", "ppr", "ppt", "bmf"):
+        for a, b in zip([run_scheme(sc, scheme) for sc in traced],
+                        run_scheme_vectorized(traced, scheme)):
+            _assert_result_parity(a, b, f"trace {scheme}")
+
+
+def test_mixed_cluster_sizes_group_and_match():
+    """Cases with different N / round structures split into compatible
+    batches internally but still come back in input order."""
+    scs = ([_scenario(n=4, k=2, seed=s, cluster=6) for s in range(3)]
+           + [_scenario(n=7, k=4, seed=s, cluster=12) for s in range(3)])
+    got = run_scheme_vectorized(scs, "bmf", seeds=[0] * 6)
+    ref = [run_scheme(sc, "bmf") for sc in scs]
+    for a, b in zip(ref, got):
+        _assert_result_parity(a, b, "mixed")
+
+
+# -------------------------------------------------- acceptance-scale sweep
+def test_vectorized_sweep_matches_serial_50_scenarios():
+    """>= 50 randomized Monte-Carlo scenarios spanning single- and
+    multi-failure scheme families: executor="vectorized" must match the
+    object engine within 1e-6 relative on total_time, with identical
+    round counts and relay hops."""
+    space = SampleSpace(
+        codes=((4, 2), (6, 3), (7, 4)), cluster_sizes=(8, 10),
+        chunk_mb=(8.0,), regimes=("hot2s", "cold5s", "redraw2s"),
+        failure_patterns=("single", "double", "rack"),
+    )
+    suite = MonteCarloSuite("parity", 50, space, base_seed=11)
+    serial = run_sweep(suite, executor="serial")
+    vec = run_sweep(suite, executor="vectorized")
+    assert len(vec.cases) == 50
+    schemes_seen = set()
+    for cs, cv in zip(serial.cases, vec.cases):
+        assert set(cs.results) == set(cv.results)
+        for scheme in cs.results:
+            schemes_seen.add(scheme)
+            a, b = cs.results[scheme], cv.results[scheme]
+            assert b.num_rounds == a.num_rounds, (cs.index, scheme)
+            assert b.relay_hops == a.relay_hops, (cs.index, scheme)
+            assert b.total_time == pytest.approx(a.total_time, rel=RTOL), \
+                (cs.index, scheme)
+    # the suite exercises both evaluation families
+    assert {"traditional", "ppr", "ppt", "bmf"} <= schemes_seen
+    assert {"mppr", "random", "msrepair"} <= schemes_seen
+
+
+def test_vectorized_sweep_on_frozen_traces_matches_serial():
+    space = SampleSpace(codes=((6, 3),), cluster_sizes=(8,), chunk_mb=(8.0,),
+                        regimes=("hot2s",), failure_patterns=("single",))
+    frozen = TraceSuite.freeze(
+        MonteCarloSuite("p", 8, space, base_seed=5), num_epochs=64)
+    serial = run_sweep(frozen, executor="serial")
+    vec = run_sweep(frozen, executor="vectorized")
+    for cs, cv in zip(serial.cases, vec.cases):
+        for scheme in cs.results:
+            assert (cv.results[scheme].total_time
+                    == pytest.approx(cs.results[scheme].total_time, rel=RTOL))
+
+
+def test_vectorized_sweep_keep_plans_and_stats():
+    suite = MonteCarloSuite(
+        "kp", 6,
+        SampleSpace(codes=((6, 3),), cluster_sizes=(8,), chunk_mb=(8.0,),
+                    regimes=("hot2s",), failure_patterns=("single",)),
+        base_seed=2)
+    sweep = run_sweep(suite, executor="vectorized", keep_plans=True)
+    for case in sweep.cases:
+        for scheme in ("ppr", "bmf"):
+            r = case.results[scheme]
+            assert r.plan is not None and r.plan.num_rounds == r.num_rounds
+    st = sweep.stats("bmf")
+    assert st.count == 6 and np.isfinite(st.mean)
+    assert (sweep.speedups("ppr", "bmf") > 0).all()
+
+
+def test_unsupported_helper_ids_fall_back_per_case():
+    """Helper (term) ids >= 64 cannot be bitmask-compiled; those cases
+    must fall back to the object engine transparently while the rest of
+    the batch stays vectorized."""
+    from repro.core.engine.arrays import UnsupportedPlanError, compile_plan
+    from repro.core.simulator import plan_for_scheme
+
+    m = topology.heterogeneous_matrix(70, low=3, high=30, seed=1)
+    bwp = BandwidthProcess(base=m, change_interval=2.0, seed=1, mode="markov")
+    big = Scenario(num_nodes=70, code=RSCode(6, 3), failed=(0,), bw=bwp,
+                   ingress=IngressModel(seed=1), chunk_mb=4.0,
+                   helpers=((65, 66, 67),))
+    # the fixture really is uncompilable — guard against silent drift
+    with pytest.raises(UnsupportedPlanError):
+        compile_plan(plan_for_scheme("ppr", big.make_jobs()))
+    small = _scenario(n=6, k=3, seed=1, cluster=8, chunk=4.0)
+    got = run_scheme_vectorized([big, small], "ppr")
+    ref = [run_scheme(big, "ppr"), run_scheme(small, "ppr")]
+    for a, b in zip(ref, got):
+        _assert_result_parity(a, b, "fallback")
+        assert b.plan == a.plan
+
+
+def test_seeds_length_mismatch_raises():
+    with pytest.raises(ValueError):
+        run_scheme_vectorized([_scenario()], "ppr", seeds=[0, 1])
+
+
+def test_integer_chunk_sizes_parity():
+    """Benchmark grids pass chunk_mb as python ints; the batched state
+    arrays must not silently become integer-typed (regression)."""
+    scs = [_scenario(seed=s, chunk=16) for s in range(3)]      # int chunk
+    for scheme in ("traditional", "ppr", "bmf", "ppt"):
+        ref = [run_scheme(sc, scheme) for sc in scs]
+        got = run_scheme_vectorized(scs, scheme)
+        for a, b in zip(ref, got):
+            _assert_result_parity(a, b, f"int-chunk {scheme}")
