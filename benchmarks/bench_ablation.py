@@ -48,6 +48,30 @@ def run() -> list[Row]:
         f"delta={reduction(t_base['bmf'], t_all['bmf']):+.1f}% "
         f"(beyond-paper extension)"))
 
+    # 2b. where the estimated savings come from: BMFStats attributes the
+    # paper's bottleneck loop vs the optimize_all extension separately
+    from repro.core import bmf
+    from repro.core.simulator import _idle_pool, plan_for_scheme
+
+    saved_bn = saved_ex = 0.0
+    for seed in range(10):
+        sc = mininet_scenario(7, 4, (0,), chunk_mb=32, seed=seed)
+        jobs = sc.make_jobs()
+        plan = plan_for_scheme("bmf", jobs)
+        bw0 = sc.bw.matrix_at(0.0)
+        for rnd in plan.rounds:
+            idle = [x for x in _idle_pool(sc, jobs)
+                    if x not in rnd.nodes_in_use()]
+            _, st = bmf.optimize_round(rnd, bw0, idle, sc.chunk_mb,
+                                       optimize_all=True)
+            saved_bn += st.time_saved_bottleneck
+            saved_ex += st.time_saved_extra
+    rows.append(Row(
+        "ablation/optimize_all_attribution", 0.0,
+        f"est_saved bottleneck_loop={saved_bn:.1f}s "
+        f"optimize_all_extra={saved_ex:.1f}s over 10 t=0 plans "
+        f"(extra share={100 * saved_ex / max(saved_bn + saved_ex, 1e-9):.0f}%)"))
+
     # 3. idle-pool sweep (paper: larger n-k-1 / idle pool -> better)
     for cluster in (6, 8, 10, 14):
         res = _times(lambda seed: mininet_scenario(

@@ -9,13 +9,16 @@ trajectory is tracked per PR.
 Three suites, separating the two bottlenecks a sweep can have:
 
 * ``table2_60`` — the paper's Table II Monte-Carlo suite (RS(7,4) double
-  failures, hot churn). *Planner-bound*: most wall-clock is the per-case
-  python schedulers (m-PPR/random/MSRepair) plus bandwidth-epoch rng, so
-  by Amdahl's law no executor can win big here; the vectorized engine
-  mainly amortizes plan compilation and fan-in splits.
+  failures, hot churn). *Planner-bound*: most wall-clock is scheduling
+  (m-PPR/random/MSRepair) plus bandwidth-epoch rng. Since the
+  array-native planner layer landed (batched MSRepair scheduling, batched
+  plan lowering/validation, in-stepper BMF replanning), the vectorized
+  executor beats serial here too — the json records the planner/exec
+  wall-clock split per executor so the remaining ceiling is visible.
 * ``table2_60_trace`` — the same 60 scenarios with their bandwidth sample
   paths frozen to replayable traces (`TraceSuite.freeze`), removing the
-  shared epoch-rng cost from the comparison.
+  shared epoch-rng cost from the comparison. This is the regression-gated
+  planner-bound suite (CI asserts its vectorized speedup).
 * ``stress_60_trace`` — an *execution-bound* suite (RS(14,10) star +
   binomial-tree repair, 1 GB chunks, hot churn, frozen traces): tens of
   thousands of contention-resolution events and almost no planning. This
@@ -53,18 +56,25 @@ def stress_suite(num_cases: int = CASES) -> TraceSuite:
     return TraceSuite.freeze(live, num_epochs=256, name="stress_trace")
 
 
-def _time_sweep(make_suite, executor: str) -> float:
-    """Best wall-clock of REPEATS runs (pool startup is timed too, so the
-    process row honestly carries its spawn cost; repeats smooth cold-cache
-    noise). The process executor gets one run — its seconds are dominated
-    by worker startup, and repeating it buys no precision."""
-    best = float("inf")
-    for _ in range(1 if executor == "process" else REPEATS):
+def _time_sweep(make_suite, executor: str) -> tuple[float, float]:
+    """Best wall-clock of REPEATS runs plus the best run's planner
+    wall-clock (summed `SimResult.planning_time` across cases/schemes —
+    the batched engine charges each case its share of batch planning, so
+    the totals are comparable across executors). Pool startup is timed
+    too, so the process row honestly carries its spawn cost (or, below
+    the spawn-amortization threshold, its serial fallback); repeats
+    smooth cold-cache noise."""
+    best, best_plan = float("inf"), 0.0
+    for _ in range(REPEATS):
         suite = make_suite()
         t0 = time.perf_counter()
-        run_sweep(suite, executor=executor)
-        best = min(best, time.perf_counter() - t0)
-    return best
+        sweep = run_sweep(suite, executor=executor)
+        secs = time.perf_counter() - t0
+        if secs < best:
+            best = secs
+            best_plan = sum(r.planning_time for c in sweep.cases
+                            for r in c.results.values())
+    return best, best_plan
 
 
 def run() -> list[Row]:
@@ -80,10 +90,16 @@ def run() -> list[Row]:
         entry: dict = {}
         serial_s = None
         for ex in EXECUTORS:
-            secs = _time_sweep(make, ex)
+            secs, plan_s = _time_sweep(make, ex)
             entry[ex] = {
                 "seconds": round(secs, 4),
                 "cases_per_sec": round(CASES / secs, 2),
+                # planner-time vs execution-time split: how much of the
+                # sweep's wall-clock went to planning (schedulers + BMF
+                # replanning) vs everything else (event stepping, glue)
+                "planner_seconds": round(plan_s, 4),
+                "exec_seconds": round(max(secs - plan_s, 0.0), 4),
+                "planner_frac": round(plan_s / secs, 3),
             }
             if ex == "serial":
                 serial_s = secs
@@ -92,6 +108,7 @@ def run() -> list[Row]:
             rows.append(Row(
                 f"sweep/{name}/{ex}", secs * 1e6 / CASES,
                 f"cases_per_sec={CASES / secs:.1f}"
+                f" planner_frac={plan_s / secs:.2f}"
                 + ("" if ex == "serial"
                    else f" speedup_vs_serial={serial_s / secs:.2f}x"),
             ))
@@ -99,6 +116,14 @@ def run() -> list[Row]:
     vec = report["suites"]["stress_60_trace"]["vectorized"]
     report["vectorized_ge_5x_on_execution_bound"] = \
         vec["speedup_vs_serial"] >= 5.0
+    # the array-native planner layer's headline: both planner-bound Table
+    # II suites at >= 3x serial (aspirational bar from ISSUE 3; current
+    # measurements land ~1.5-2x — the shared per-case scheduler + rng
+    # floor caps the ratio, see docs/architecture.md "planner layer")
+    report["vectorized_ge_3x_on_planner_bound"] = all(
+        report["suites"][s]["vectorized"].get("speedup_vs_serial", 0) >= 3.0
+        for s in ("table2_60", "table2_60_trace")
+    )
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)
     rows.append(Row("sweep/json", 0.0, f"wrote {OUT_PATH}"))

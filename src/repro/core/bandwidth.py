@@ -16,6 +16,7 @@ Two empirical facts from the paper drive this module:
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -58,13 +59,21 @@ class BandwidthProcess:
         # The innovation memo serves the overlapping markov AR windows:
         # consecutive epochs share all but one N(0,1) draw, so caching
         # cuts epoch-matrix generation from O(horizon) to O(1) rng calls.
+        # The AR-state memo does the same for the Horner recursion: while
+        # the window still starts at epoch 0 (e <= horizon), x_e is exactly
+        # x_{e-1} * rho + z_e, so one fused multiply-add replaces the
+        # whole window walk — bit-identical by construction.
         object.__setattr__(self, "_epoch_cache", {})
         object.__setattr__(self, "_innov_cache", {})
+        object.__setattr__(self, "_ar_cache", {})
+        object.__setattr__(self, "_block_cache", {})
 
     def epoch_of(self, t: float) -> int:
         if self.change_interval is None:
             return 0
-        return int(np.floor(t / self.change_interval))
+        # math.floor(t / i) == int(np.floor(t / i)) for finite floats and
+        # is an order of magnitude cheaper on the per-event hot path
+        return math.floor(t / self.change_interval)
 
     def epoch_end(self, t: float) -> float:
         if self.change_interval is None:
@@ -87,30 +96,57 @@ class BandwidthProcess:
             self._innov_cache[e] = z
         return z
 
+    def _ar_state(self, e: int, innovations: dict[int, np.ndarray] | None) -> np.ndarray:
+        """Markov AR state x_e, evaluated by the same Horner recursion the
+        windowed sum has always used. While the truncation window still
+        starts at epoch 0 (e <= horizon) the memoized previous state gives
+        x_e = x_{e-1} * rho + z_e in one step — the identical float ops,
+        just not recomputed from scratch each epoch."""
+
+        def innov(i: int) -> np.ndarray:
+            return innovations[i] if innovations is not None \
+                else self._innovation(i)
+
+        start = max(0, e - self._AR_HORIZON)
+        if start == 0:
+            cached = self._ar_cache.get(e)
+            if cached is not None:
+                return cached
+            prev = self._ar_cache.get(e - 1) if e > 0 else None
+            if prev is not None:
+                x = prev * self.rho + innov(e)
+            else:
+                x = innov(0)
+                for i in range(1, e + 1):
+                    x = x * self.rho + innov(i)
+            if len(self._ar_cache) >= 4 * self._CACHE_LIMIT:
+                self._ar_cache.clear()
+            x.setflags(write=False)
+            self._ar_cache[e] = x
+            return x
+        x = innov(start)
+        for i in range(start + 1, e + 1):
+            x = x * self.rho + innov(i)
+        return x
+
     def _epoch_matrix(self, e: int, innovations: dict[int, np.ndarray] | None = None) -> np.ndarray:
         """The epoch-e matrix, uncached. `innovations` optionally supplies
         precomputed markov draws (bit-identical to `_innovation`) so batch
         sampling avoids re-deriving the AR window per epoch."""
-        rng = np.random.default_rng(np.random.SeedSequence([self.seed, e]))
         if self.mode == "redraw":
+            rng = np.random.default_rng(np.random.SeedSequence([self.seed, e]))
             off = ~np.eye(self.base.shape[0], dtype=bool)
             lo = float(self.base[off].min())
             hi = float(self.base[off].max())
             m = rng.uniform(lo, hi, self.base.shape)
         elif self.mode == "jitter":
+            rng = np.random.default_rng(np.random.SeedSequence([self.seed, e]))
             scale = rng.uniform(1.0 - self.jitter, 1.0 + self.jitter, self.base.shape)
             m = self.base * scale
         elif self.mode == "markov":
             # exact log-AR(1) via truncated innovation sum (epoch-addressable):
             # x_e = sigma*sqrt(1-rho^2) * sum_{i} rho^(e-i) z_i,  z_i ~ N(0,1)
-            x = np.zeros_like(self.base)
-            start = max(0, e - self._AR_HORIZON)
-            for i in range(start, e + 1):
-                if innovations is not None:
-                    z = innovations[i]
-                else:
-                    z = self._innovation(i)
-                x = x * self.rho + z if i > start else z
+            x = self._ar_state(e, innovations)
             m = self.base * np.exp(self.sigma * np.sqrt(1 - self.rho**2) * x)
         else:
             raise ValueError(f"unknown bandwidth mode {self.mode!r}")
@@ -144,9 +180,13 @@ class BandwidthProcess:
         Bit-identical to ``[matrix_at(e * interval) for e in epochs]`` but
         amortized: markov innovations are drawn once per epoch and shared
         across the overlapping AR windows (O(E) rng draws instead of
-        O(E * horizon)), and per-link math stays vectorized over the full
-        N x N matrix. This is the bulk-sampling substrate for the sweep
-        engine and for recording `BandwidthTrace`s.
+        O(E * horizon)), the AR states accumulate by the same one-step
+        Horner recursion `_ar_state` uses, and the per-link math (exp,
+        scale, clamp, diagonal) runs once over the whole (E, N, N) stack —
+        elementwise, so each epoch's floats are exactly `matrix_at`'s.
+        This is the bulk-sampling substrate for the sweep engine, the
+        batched engine's live-epoch prefetch, and `BandwidthTrace`
+        recording.
         """
         if num_epochs < 0 or start_epoch < 0:
             raise ValueError("num_epochs and start_epoch must be >= 0")
@@ -154,17 +194,40 @@ class BandwidthProcess:
         if self.change_interval is None or (self.mode == "jitter" and self.jitter == 0.0):
             out = np.broadcast_to(self.base, (num_epochs, n, n)).copy()
             return out
-        innovations: dict[int, np.ndarray] | None = None
-        if self.mode == "markov":
-            lo = max(0, start_epoch - self._AR_HORIZON)
-            innovations = {
-                i: self._innovation(i)
-                for i in range(lo, start_epoch + num_epochs)
-            }
+        if self.mode == "markov" and num_epochs:
+            x = np.empty((num_epochs, n, n))
+            for j, e in enumerate(range(start_epoch, start_epoch + num_epochs)):
+                x[j] = self._ar_state(e, None)
+            out = self.base * np.exp(
+                self.sigma * np.sqrt(1 - self.rho**2) * x)
+            np.maximum(out, self.min_bw, out=out)
+            out[:, np.arange(n), np.arange(n)] = 0.0
+            return out
         out = np.empty((num_epochs, n, n), dtype=float)
         for j, e in enumerate(range(start_epoch, start_epoch + num_epochs)):
-            out[j] = self._epoch_matrix(e, innovations)
+            out[j] = self._epoch_matrix(e)
         return out
+
+    _BLOCK_EPOCHS = 4
+
+    def epochs_block(self, e: int) -> tuple[int, np.ndarray]:
+        """The block-aligned `(start, (K, N, N))` stack covering epoch `e`.
+
+        Blocks are `sample_epochs` slices aligned to multiples of
+        `_BLOCK_EPOCHS` and memoized per instance, so consumers that walk
+        epochs in order (the batched engine's bandwidth stack) amortize
+        both the rng and the per-epoch wrapper across the block — and
+        across repeated walks, e.g. one per scheme in a sweep.
+        """
+        start = (e // self._BLOCK_EPOCHS) * self._BLOCK_EPOCHS
+        blk = self._block_cache.get(start)
+        if blk is None:
+            if len(self._block_cache) >= self._CACHE_LIMIT:
+                self._block_cache.clear()
+            blk = self.sample_epochs(self._BLOCK_EPOCHS, start_epoch=start)
+            blk.setflags(write=False)
+            self._block_cache[start] = blk
+        return start, blk
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,7 +287,7 @@ class BandwidthTrace:
         return self.epochs.shape[0]
 
     def epoch_of(self, t: float) -> int:
-        return int(np.floor(t / self.change_interval))
+        return math.floor(t / self.change_interval)
 
     def epoch_end(self, t: float) -> float:
         return (self.epoch_of(t) + 1) * self.change_interval

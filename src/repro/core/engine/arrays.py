@@ -117,12 +117,29 @@ class PlanArrays:
         return path[:, :-1], path[:, 1:], self.t_path_len[sl] - 1
 
 
+def _job_fields(jobs: list[Job]) -> dict:
+    """The job-side `PlanArrays` fields shared by both constructors."""
+    hmax = max(max((len(j.helpers) for j in jobs), default=0), 1)
+    ids = np.array(
+        [(j.job_id, j.failed_node, j.requestor, len(j.helpers))
+         for j in jobs], dtype=np.int32).reshape(len(jobs), 4)
+    job_helpers = np.array(
+        [(*j.helpers, *(-1,) * (hmax - len(j.helpers))) for j in jobs],
+        dtype=np.int32).reshape(len(jobs), hmax)
+    return dict(
+        job_id=ids[:, 0],
+        job_failed=ids[:, 1],
+        job_requestor=ids[:, 2],
+        job_helpers=job_helpers,
+        job_helpers_len=ids[:, 3],
+        job_terms=np.array([_terms_mask(j.helpers) for j in jobs],
+                           dtype=np.uint64),
+    )
+
+
 def compile_plan(plan: RepairPlan) -> PlanArrays:
     """Lower a `RepairPlan` to `PlanArrays` (exact, reversible)."""
     jobs = plan.jobs
-    hmax = max(max((len(j.helpers) for j in jobs), default=0), 1)
-    job_helpers = [list(j.helpers) + [-1] * (hmax - len(j.helpers))
-                   for j in jobs]
     job_index = {j.job_id: i for i, j in enumerate(jobs)}
 
     transfers = [t for rnd in plan.rounds for t in rnd.transfers]
@@ -140,15 +157,7 @@ def compile_plan(plan: RepairPlan) -> PlanArrays:
         + [x for t in transfers for x in t.path]
     )
     return PlanArrays(
-        job_id=np.array([j.job_id for j in jobs], dtype=np.int32),
-        job_failed=np.array([j.failed_node for j in jobs], dtype=np.int32),
-        job_requestor=np.array([j.requestor for j in jobs], dtype=np.int32),
-        job_helpers=np.array(job_helpers, dtype=np.int32).reshape(
-            len(jobs), hmax),
-        job_helpers_len=np.array([len(j.helpers) for j in jobs],
-                                 dtype=np.int32),
-        job_terms=np.array([_terms_mask(j.helpers) for j in jobs],
-                           dtype=np.uint64),
+        **_job_fields(jobs),
         t_src=np.array([t.src for t in transfers], dtype=np.int32),
         t_dst=np.array([t.dst for t in transfers], dtype=np.int32),
         t_job=np.array([t.job for t in transfers], dtype=np.int32),
@@ -165,6 +174,122 @@ def compile_plan(plan: RepairPlan) -> PlanArrays:
         num_nodes=max_node + 1,
         meta=dict(plan.meta),
     )
+
+
+def _schedule_max_node(jobs: list[Job], flat: list) -> int:
+    """Highest node id a schedule references (jobs + transfer endpoints)."""
+    return max(
+        [0]
+        + [x for j in jobs for x in (j.failed_node, j.requestor, *j.helpers)]
+        + [x for tr in flat for x in tr[:2]]
+    )
+
+
+def _schedule_t_job_idx(jobs: list[Job], flat: list,
+                        job_col: np.ndarray) -> np.ndarray:
+    """Row-into-jobs index per transfer (identity fast path included)."""
+    if all(j.job_id == i for i, j in enumerate(jobs)):
+        return job_col                  # identity mapping, no lookup pass
+    index = {j.job_id: i for i, j in enumerate(jobs)}
+    return np.array([index[tr[2]] for tr in flat], dtype=np.int32)
+
+
+def _round_starts(rounds: list[list]) -> np.ndarray:
+    starts = [0]
+    for rnd in rounds:
+        starts.append(starts[-1] + len(rnd))
+    return np.array(starts, dtype=np.int32)
+
+
+def _case_plan_arrays(
+    jobs: list[Job],
+    rounds: list[list[tuple[int, int, int, int]]],
+    flat: list,
+    meta: dict,
+    job_fields: dict,
+    ints: np.ndarray,          # (T, 3) int32 — src, dst, job columns
+    terms: np.ndarray,         # (T,) uint64
+) -> PlanArrays:
+    """Assemble one case's `PlanArrays` from pre-lowered column arrays —
+    the single construction path shared by `plan_arrays_from_schedule`
+    and the batched `planner_arrays.lower_schedules_batch` (which passes
+    slices of its concatenated buffers)."""
+    return PlanArrays(
+        **job_fields,
+        t_src=ints[:, 0],
+        t_dst=ints[:, 1],
+        t_job=ints[:, 2],
+        t_job_idx=_schedule_t_job_idx(jobs, flat, ints[:, 2]),
+        t_terms=terms,
+        t_path=ints[:, :2].copy(),
+        t_path_len=np.full(len(flat), 2, dtype=np.int32),
+        round_start=_round_starts(rounds),
+        num_nodes=_schedule_max_node(jobs, flat) + 1,
+        meta=dict(meta),
+    )
+
+
+def plan_arrays_from_schedule(
+    jobs: list[Job],
+    rounds: list[list[tuple[int, int, int, int]]],
+    meta: dict,
+) -> PlanArrays:
+    """Build `PlanArrays` straight from a tuple schedule — no object plan.
+
+    `rounds[r]` holds `(src, dst, job_id, terms_mask)` tuples (direct
+    transfers; BMF relays are spliced in later via `splice_path`). This is
+    the array planners' native exit: `decompile` of the result equals the
+    object facade's `RepairPlan` exactly, but the hot path never allocates
+    `Transfer`/`Round` objects.
+    """
+    job_index = {j.job_id: i for i, j in enumerate(jobs)}
+    flat = [tr for rnd in rounds for tr in rnd]
+    for src, dst, job_id, mask in flat:
+        if job_id not in job_index:
+            raise UnsupportedPlanError(
+                f"transfer {src}->{dst} references unknown job {job_id}")
+        if mask >> _MAX_MASK_NODES:
+            raise UnsupportedPlanError(
+                "term node id >= 64 does not fit a uint64 bitmask")
+    # one bulk lowering: masks checked < 2**64 above, src/dst/job ids are
+    # small non-negative ints, so a single uint64 matrix carries all four
+    # columns and the typed views are cheap slices of it
+    tarr = np.array(flat, dtype=np.uint64).reshape(len(flat), 4)
+    ints = tarr[:, :3].astype(np.int32)
+    return _case_plan_arrays(jobs, rounds, flat, meta, _job_fields(jobs),
+                             ints, tarr[:, 3])
+
+
+def splice_path(pa: PlanArrays, row: int, path: tuple[int, ...]) -> None:
+    """Splice a (relayed) path into transfer `row`, widening `t_path` as
+    needed — the incremental mutation the in-stepper BMF replanner uses.
+
+    Validates the splice locally: the path must keep the transfer's
+    endpoints, be acyclic and have length >= 2 (the `Transfer` invariants).
+    Cross-transfer invariants (relay role exclusivity etc.) are *not*
+    re-checked here — run `validate_plan_arrays` on the mutated plan for
+    the full audit.
+    """
+    path = tuple(int(x) for x in path)
+    if len(path) < 2:
+        raise ValueError(f"path {path} too short")
+    if path[0] != int(pa.t_src[row]) or path[-1] != int(pa.t_dst[row]):
+        raise ValueError(
+            f"path {path} does not keep endpoints "
+            f"{int(pa.t_src[row])}->{int(pa.t_dst[row])}")
+    if len(set(path)) != len(path):
+        raise ValueError(f"cyclic path {path}")
+    pmax = pa.t_path.shape[1]
+    if len(path) > pmax:
+        pa.t_path = np.concatenate(
+            [pa.t_path,
+             np.full((pa.t_path.shape[0], len(path) - pmax), -1,
+                     dtype=np.int32)], axis=1)
+    pa.t_path[row, : len(path)] = path
+    pa.t_path[row, len(path):] = -1
+    pa.t_path_len[row] = len(path)
+    if max(path) >= pa.num_nodes:
+        pa.num_nodes = max(path) + 1
 
 
 def decompile(pa: PlanArrays) -> RepairPlan:
@@ -197,22 +322,70 @@ def decompile(pa: PlanArrays) -> RepairPlan:
     return RepairPlan(jobs=jobs, rounds=rounds, meta=dict(pa.meta))
 
 
+# below this many transfers the bincount machinery costs more numpy-call
+# overhead than a plain python scan of the (tiny) id lists saves
+_SMALL_VALIDATE_TRANSFERS = 64
+
+
+def _validate_roles_small(pa: PlanArrays, max_recv_per_round: int,
+                          srcs: list, dsts: list) -> None:
+    """Per-round role-exclusivity scan for small plans (python counters
+    over the id lists — same violations, same messages as the array
+    path, reported round by round like the object walk)."""
+    lens = pa.t_path_len.tolist()
+    paths = pa.t_path.tolist()
+    starts = pa.round_start.tolist()
+    for r in range(pa.num_rounds):
+        send: dict[int, int] = {}
+        recv: dict[int, int] = {}
+        relay: dict[int, int] = {}
+        for i in range(starts[r], starts[r + 1]):
+            send[srcs[i]] = send.get(srcs[i], 0) + 1
+            recv[dsts[i]] = recv.get(dsts[i], 0) + 1
+            for rl in paths[i][1: lens[i] - 1]:
+                relay[rl] = relay.get(rl, 0) + 1
+        for node, c in send.items():
+            if c > 1:
+                raise ValueError(
+                    f"node {node} sends {c} transfers in one round")
+            if relay.get(node):
+                raise ValueError(f"node {node} both sends and relays")
+            if recv.get(node):
+                raise ValueError(
+                    f"node {node} both sends and receives in a round")
+        for node, c in recv.items():
+            if c > max_recv_per_round:
+                raise ValueError(
+                    f"node {node} receives {c} transfers in one round")
+            if relay.get(node):
+                raise ValueError(f"node {node} both receives and relays")
+        for node, c in relay.items():
+            if c > 1:
+                raise ValueError(
+                    f"relay node {node} used {c} times in one round")
+
+
 def validate_plan_arrays(pa: PlanArrays, *, max_recv_per_round: int = 1) -> None:
     """Array fast path of `repro.core.plan.validate_plan`.
 
     Enforces the same invariants (and raises `ValueError` for the same
     violations) as the object-based `FragmentState` walk. Role exclusivity
     is checked for *all rounds at once*: one `np.bincount` per role over
-    `round * N + node` keys replaces per-round dict counters. Fragment
-    movement stays a sequential walk, but over term *bitmasks* (python
-    ints, no set allocation). When a plan holds several violations the
-    first one reported may differ from the object path; the accept/reject
-    verdict never does.
+    `round * N + node` keys replaces per-round dict counters (small plans
+    take a python scan instead — the bincount setup costs more than it
+    saves there). Fragment movement stays a sequential walk, but over
+    term *bitmasks* (python ints, no set allocation). When a plan holds
+    several violations the first one reported may differ from the object
+    path; the accept/reject verdict never does.
     """
     n = max(int(pa.num_nodes), 1)
     num_r = pa.num_rounds
     num_t = pa.num_transfers
-    if num_t:
+    srcs = pa.t_src.tolist()
+    dsts = pa.t_dst.tolist()
+    if num_t and num_t < _SMALL_VALIDATE_TRANSFERS:
+        _validate_roles_small(pa, max_recv_per_round, srcs, dsts)
+    elif num_t:
         counts = np.diff(pa.round_start).astype(np.int64)
         round_id = np.repeat(np.arange(num_r, dtype=np.int64), counts)
         size = num_r * n
@@ -255,11 +428,10 @@ def validate_plan_arrays(pa: PlanArrays, *, max_recv_per_round: int = 1) -> None
     # forwarded whole — XOR-folds cannot be split); python-int bit ops
     hold = [[0] * n for _ in range(pa.num_jobs)]
     helpers_flat = pa.job_helpers.tolist()
+    hlens = pa.job_helpers_len.tolist()
     for j in range(pa.num_jobs):
-        for h in helpers_flat[j][: int(pa.job_helpers_len[j])]:
+        for h in helpers_flat[j][: hlens[j]]:
             hold[j][h] = 1 << h
-    srcs = pa.t_src.tolist()
-    dsts = pa.t_dst.tolist()
     jidx = pa.t_job_idx.tolist()
     jraw = pa.t_job.tolist()
     terms = pa.t_terms.tolist()

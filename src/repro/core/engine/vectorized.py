@@ -19,11 +19,16 @@ between events is vectorized:
 * epoch flips refresh a per-case `(B, N, N)` bandwidth stack only when a
   case actually crosses its epoch boundary.
 
-Planning (the schemes' Python planners and per-round BMF re-optimization)
-stays per-case object code — it is ~3% of repair time (paper Fig. 8) and
-is where the paper's "monitor + replan every timestamp" logic lives. The
-`(B, ...)` layout is the seam a future `jax.vmap`/Pallas stepper plugs
-into: the inner loop is already pure array math over static shapes.
+Planning is array-native too (`repro.core.engine.planner_arrays`): each
+case's schedule is lowered straight to `PlanArrays` (no object plan on
+the hot path), and the per-round BMF re-optimization — the paper's
+"monitor + replan every timestamp" logic — runs *inside* the stepper as
+`optimize_round_batch`: one batched candidate-path enumeration over the
+live `(B, N, N)` bandwidth stack reroutes the bottleneck transfer of
+every case at once, splicing the relayed paths back into the compiled
+plans in place. The `(B, ...)` layout is the seam a future
+`jax.vmap`/Pallas stepper plugs into: both execution *and* replanning
+are now array math over static shapes.
 """
 from __future__ import annotations
 
@@ -33,18 +38,17 @@ import time as _time
 
 import numpy as np
 
-from repro.core import bmf
-from repro.core.engine.arrays import (PlanArrays, UnsupportedPlanError,
-                                      compile_plan, validate_plan_arrays)
-from repro.core.plan import RepairPlan, Round
+from repro.core.engine.arrays import PlanArrays, decompile, splice_path
+from repro.core.engine.planner_arrays import (lower_schedules_batch,
+                                              msrepair_schedule_batch,
+                                              optimize_round_batch,
+                                              schedule_for_scheme)
 from repro.core.ppt import build_ppt_tree
-from repro.core.simulator import (Scenario, SimResult, _idle_pool,
-                                  pipeline_fill_latency, plan_for_scheme,
-                                  run_scheme)
+from repro.core.simulator import (Scenario, SimResult,
+                                  pipeline_fill_latency, run_scheme)
 
 _EPS = 1e-9
 _GUARD = 100_000
-_MISSING = object()
 
 
 # ------------------------------------------------------------ batch context
@@ -60,15 +64,23 @@ class _BatchBandwidth:
     """
 
     _DENSE_LIMIT_BYTES = 128 * 1024 * 1024
+    # build the dense all-trace gather stack only once this many crossings
+    # per case have been served — batches that barely touch their traces
+    # never pay the full (B, Emax, N, N) prefill copy, while churn-heavy
+    # runs (the stress suites) amortize it almost immediately
+    _DENSE_AFTER_CROSSINGS = 2
 
     def __init__(self, bwps, num_nodes: int):
         from repro.core.bandwidth import BandwidthTrace
 
         self.bwps = list(bwps)
         b = len(self.bwps)
+        self.num_nodes = num_nodes
         self.stack = np.zeros((b, num_nodes, num_nodes), dtype=float)
         self.epoch = np.zeros(b, dtype=np.int64)
         self.epoch_end = np.full(b, -np.inf)
+        # per-case prefetch block for live processes: (start_epoch, stack)
+        self._live_block: list = [None] * b
         # per-case serving recipe: (interval, epochs, num_epochs, cycle)
         # for traces, None for everything served through matrix_at
         self._trace = [
@@ -76,20 +88,27 @@ class _BatchBandwidth:
             if type(bwp) is BandwidthTrace else None
             for bwp in self.bwps
         ]
-        # all-trace batches get a padded (B, Emax, N, N) stack so a whole
-        # refresh is one fancy gather instead of a per-case python loop
         self._dense = None
-        if all(tr is not None for tr in self._trace) and b:
-            emax = max(tr[2] for tr in self._trace)
-            if b * emax * num_nodes * num_nodes * 8 <= self._DENSE_LIMIT_BYTES:
-                dense = np.zeros((b, emax, num_nodes, num_nodes))
-                for i, (_, epochs, num_e, _) in enumerate(self._trace):
-                    n = epochs.shape[1]
-                    dense[i, :num_e, :n, :n] = epochs
-                self._dense = dense
-                self._interval = np.array([tr[0] for tr in self._trace])
-                self._num_epochs = np.array([tr[2] for tr in self._trace])
-                self._cycle = np.array([tr[3] for tr in self._trace])
+        self._crossings = 0
+        self._dense_ok = (
+            b > 0 and all(tr is not None for tr in self._trace)
+            and (b * max(tr[2] for tr in self._trace)
+                 * num_nodes * num_nodes * 8) <= self._DENSE_LIMIT_BYTES
+        )
+
+    def _build_dense(self) -> None:
+        """All-trace batches get a padded (B, Emax, N, N) stack so a whole
+        refresh is one fancy gather instead of a per-case python loop."""
+        b = len(self.bwps)
+        emax = max(tr[2] for tr in self._trace)
+        dense = np.zeros((b, emax, self.num_nodes, self.num_nodes))
+        for i, (_, epochs, num_e, _) in enumerate(self._trace):
+            n = epochs.shape[1]
+            dense[i, :num_e, :n, :n] = epochs
+        self._dense = dense
+        self._interval = np.array([tr[0] for tr in self._trace])
+        self._num_epochs = np.array([tr[2] for tr in self._trace])
+        self._cycle = np.array([tr[3] for tr in self._trace])
 
     def refresh(self, t: np.ndarray, active: np.ndarray) -> None:
         """Reload matrices for active cases whose epoch boundary passed."""
@@ -107,6 +126,12 @@ class _BatchBandwidth:
                 self.epoch[rows] = e
                 self.epoch_end[rows] = (e + 1) * self._interval[rows]
             return
+        if self._dense_ok:
+            self._crossings += int(crossed.sum())
+            if self._crossings > self._DENSE_AFTER_CROSSINGS * len(self.bwps):
+                self._build_dense()
+                self.refresh(t, active)
+                return
         for b in np.nonzero(crossed)[0]:
             tb = float(t[b])
             trace = self._trace[b]
@@ -119,9 +144,24 @@ class _BatchBandwidth:
                                        else min(e, num_epochs - 1)]
             else:
                 bwp = self.bwps[b]
-                self.epoch[b] = bwp.epoch_of(tb)
-                self.epoch_end[b] = bwp.epoch_end(tb)
-                self.stack[b] = bwp.matrix_at(tb)
+                interval = bwp.change_interval
+                if interval is None:
+                    self.epoch[b] = 0
+                    self.epoch_end[b] = np.inf
+                    self.stack[b] = bwp.matrix_at(tb)
+                    continue
+                e = bwp.epoch_of(tb)
+                self.epoch[b] = e
+                self.epoch_end[b] = (e + 1) * interval
+                # serve from the process's aligned epoch block (one
+                # vectorized `sample_epochs` per block, memoized on the
+                # process instance — bit-identical to `matrix_at`, minus
+                # the per-epoch wrapper overhead, shared across schemes)
+                blk = self._live_block[b]
+                if blk is None or not blk[0] <= e < blk[0] + blk[1].shape[0]:
+                    blk = bwp.epochs_block(e)
+                    self._live_block[b] = blk
+                self.stack[b] = blk[1][e - blk[0]]
 
 
 def _group_structure(
@@ -268,23 +308,40 @@ def execute_round_batch(
     return t
 
 
-def _hops_from_rounds(rounds: list[Round]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pad one round's transfers (per case) into (B, T, H) hop arrays."""
-    B = len(rounds)
-    T = max((len(r.transfers) for r in rounds), default=0)
-    H = max((len(tr.path) - 1 for r in rounds for tr in r.transfers),
-            default=1)
-    hop_u = np.full((B, max(T, 1), max(H, 1)), -1, dtype=np.int64)
-    hop_v = np.full_like(hop_u, -1)
-    n_hops = np.zeros((B, max(T, 1)), dtype=np.int64)
-    for b, rnd in enumerate(rounds):
-        for i, tr in enumerate(rnd.transfers):
-            nh = len(tr.path) - 1
-            hop_u[b, i, :nh] = tr.path[:-1]
-            hop_v[b, i, :nh] = tr.path[1:]
-            n_hops[b, i] = nh
-    # padding hops index node 0 so fancy-indexing stays in bounds; they are
-    # masked out by n_hops == 0 / hop_i >= n_hops before any rate math
+def _gather_all_rounds(
+    arrays: list[PlanArrays],
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad every plan's rounds into (B, R, T, H) hop tensors, one pass.
+
+    A plan with fewer than R rounds contributes all-padding rows for the
+    missing rounds — batches mix round counts, and cases whose plan is
+    exhausted just sit out the remaining rounds (their transfers are
+    masked everywhere). Padding hops index node 0 so fancy-indexing
+    stays in bounds; they are masked out by n_hops == 0 / hop_i >=
+    n_hops before any rate math.
+    """
+    B = len(arrays)
+    R = max(pa.num_rounds for pa in arrays)
+    T = max((int(np.diff(pa.round_start).max(initial=0))
+             for pa in arrays), default=0)
+    H = max(pa.t_path.shape[1] - 1 for pa in arrays)
+    hop_u = np.zeros((B, R, max(T, 1), max(H, 1)), dtype=np.int64)
+    hop_v = np.zeros_like(hop_u)
+    n_hops = np.zeros((B, R, max(T, 1)), dtype=np.int64)
+    for b, pa in enumerate(arrays):
+        nt = pa.num_transfers
+        if not nt:
+            continue
+        starts = pa.round_start
+        counts = np.diff(starts)
+        rid = np.repeat(np.arange(pa.num_rounds), counts)
+        pos = np.arange(nt) - np.repeat(starts[:-1], counts)
+        path = pa.t_path
+        hw = path.shape[1] - 1
+        hop_u[b, rid, pos, :hw] = path[:, :-1]
+        hop_v[b, rid, pos, :hw] = path[:, 1:]
+        n_hops[b, rid, pos] = pa.t_path_len - 1
+    # lift the -1 path padding to node 0 in one pass over the batch
     np.maximum(hop_u, 0, out=hop_u)
     np.maximum(hop_v, 0, out=hop_v)
     return hop_u, hop_v, n_hops
@@ -448,20 +505,19 @@ def _run_ppt_batch(scenarios: list[Scenario]) -> list[SimResult]:
 
 def _run_rounds_batch(
     scenarios: list[Scenario],
-    scheme: str,
-    plans: list[RepairPlan],
+    schemes: list[str],
     arrays: list[PlanArrays],
-    jobs_list,
     plan_clocks: list[float],
     *,
+    bmf_rows: np.ndarray,          # (B,) bool — rows with per-round replan
+    static_plan_time: bool,
     bmf_optimize_all: bool,
+    keep_plans: bool,
 ) -> list[SimResult]:
     B = len(scenarios)
-    R = plans[0].num_rounds
+    rounds_of = [pa.num_rounds for pa in arrays]
     num_nodes = max(max(sc.num_nodes, pa.num_nodes)
                     for sc, pa in zip(scenarios, arrays))
-    use_bmf = scheme in ("bmf", "msrepair", "bmf_static")
-    static_plan_time = scheme == "bmf_static"
 
     bb = _BatchBandwidth([sc.bw for sc in scenarios], num_nodes)
     degrade, floor, _ = _ingress_params(scenarios)
@@ -470,70 +526,192 @@ def _run_rounds_batch(
     wcache: dict = {}
 
     t = np.zeros(B)
-    round_times: list[list[float]] = [[] for _ in range(B)]
-    relay_hops = [0] * B
+    relay_hops = np.zeros(B, dtype=np.int64)
     logs: list[list[str]] = [[] for _ in range(B)]
-    executed: list[list[Round]] = [[] for _ in range(B)]
-    plan_clock = list(plan_clocks)
+    plan_clock = np.array(plan_clocks)
+    hop_all_u, hop_all_v, n_hops_all = _gather_all_rounds(arrays)
+    R = hop_all_u.shape[1]
+    rt = np.zeros((R, B))
+
+    bb_plan = bb
+    idle_base = None
+    brows = np.nonzero(bmf_rows)[0]
+    if brows.size:
+        # per-case idle pool: nodes outside every job's requestor/failed
+        # set, limited to the case's own cluster (== simulator._idle_pool).
+        # NOTE: built from the *scenario's* jobs, not the plan's — for
+        # bmf/bmf_static the plan carries only the first job, but every
+        # failed node must stay out of the relay pool.
+        idle_base = np.zeros((brows.size, num_nodes), dtype=bool)
+        for k, b in enumerate(brows):
+            sc = scenarios[b]
+            idle_base[k, : sc.num_nodes] = True
+            for j in sc.make_jobs():
+                idle_base[k, j.requestor] = False
+                idle_base[k, j.failed_node] = False
+        if static_plan_time:   # plan-once ablation: t=0 snapshot throughout
+            bb_plan = _BatchBandwidth([sc.bw for sc in scenarios], num_nodes)
+            bb_plan.refresh(np.zeros(B), np.ones(B, dtype=bool))
 
     for r in range(R):
-        rounds_b: list[Round] = []
-        for b in range(B):
-            rnd = plans[b].rounds[r]
-            if use_bmf:
-                sc = scenarios[b]
-                tic = _time.perf_counter()
-                bw_now = sc.bw.matrix_at(0.0 if static_plan_time
-                                         else float(t[b]))
-                idle = [x for x in _idle_pool(sc, jobs_list[b])
-                        if x not in rnd.nodes_in_use()]
-                rnd, stats = bmf.optimize_round(
-                    rnd, bw_now, idle, sc.chunk_mb,
-                    optimize_all=bmf_optimize_all,
+        hop_u = hop_all_u[:, r]
+        hop_v = hop_all_v[:, r]
+        n_hops = n_hops_all[:, r]
+        if brows.size:
+            # in-stepper replan: one batched BMF pass reroutes every
+            # replanning row's bottleneck transfers on the live stack
+            tic = _time.perf_counter()
+            if not static_plan_time:
+                bb_plan.refresh(t, bmf_rows)
+            hu, hv, nh = hop_u[brows], hop_v[brows], n_hops[brows]
+            H = hu.shape[2]
+            valid = np.arange(H)[None, None, :] < nh[:, :, None]
+            vb, vt, vh = np.nonzero(valid)
+            used = np.zeros((brows.size, num_nodes), dtype=bool)
+            used[vb, hu[vb, vt, vh]] = True
+            used[vb, hv[vb, vt, vh]] = True
+            avail = idle_base & ~used
+            hu, hv, stats, spliced = optimize_round_batch(
+                hu, hv, nh, bb_plan.stack[brows], chunk[brows], avail,
+                optimize_all=bmf_optimize_all,
+            )
+            if hu.shape[2] > H:     # a relayed path outgrew the hop axis
+                pad = ((0, 0), (0, 0), (0, 0), (0, hu.shape[2] - H))
+                hop_all_u = np.pad(hop_all_u, pad)
+                hop_all_v = np.pad(hop_all_v, pad)
+                hop_u, hop_v = hop_all_u[:, r], hop_all_v[:, r]
+            hop_u[brows] = hu
+            hop_v[brows] = hv
+            n_hops[brows] = nh
+            # batched planning wall-clock is shared: charge each replan
+            # row its share (keeps sweep-level planning totals honest)
+            plan_clock[brows] += (_time.perf_counter() - tic) / brows.size
+            relay_hops[brows] += np.where(nh > 0, nh - 1, 0).sum(axis=1)
+            for k in np.nonzero(stats.improved_links)[0]:
+                b = brows[k]
+                logs[b].append(
+                    f"t={float(t[b]):.2f}s round {r}: BMF rerouted "
+                    f"{int(stats.improved_links[k])} link(s), "
+                    f"est -{float(stats.time_saved[k]):.2f}s"
                 )
-                plan_clock[b] += _time.perf_counter() - tic
-                relay_hops[b] += sum(len(tr.relays) for tr in rnd.transfers)
-                if stats.improved_links:
-                    logs[b].append(
-                        f"t={float(t[b]):.2f}s round {r}: BMF rerouted "
-                        f"{stats.improved_links} link(s), "
-                        f"est -{stats.time_saved:.2f}s"
-                    )
-            rounds_b.append(rnd)
-            executed[b].append(rnd)
-
-        if use_bmf:
-            hop_u, hop_v, n_hops = _hops_from_rounds(rounds_b)
-        else:
-            # offline schemes execute the compiled plan arrays directly
-            per = [pa.round_hops(r) for pa in arrays]
-            T = max(p[0].shape[0] for p in per)
-            H = max(p[0].shape[1] for p in per)
-            hop_u = np.zeros((B, max(T, 1), max(H, 1)), dtype=np.int64)
-            hop_v = np.zeros_like(hop_u)
-            n_hops = np.zeros((B, max(T, 1)), dtype=np.int64)
-            for b, (hu, hv, nh) in enumerate(per):
-                hop_u[b, : hu.shape[0], : hu.shape[1]] = np.maximum(hu, 0)
-                hop_v[b, : hv.shape[0], : hv.shape[1]] = np.maximum(hv, 0)
-                n_hops[b, : nh.shape[0]] = nh
+            for k, row, path in spliced:
+                pa = arrays[brows[k]]
+                splice_path(pa, int(pa.round_start[r]) + row, path)
         t_end = execute_round_batch(
             hop_u, hop_v, n_hops, t, bb, ingresses, chunk,
             wcache, degrade, floor,
         )
-        for b in range(B):
-            round_times[b].append(float(t_end[b] - t[b]))
+        rt[r] = t_end - t
         t = t_end
 
     return [
         SimResult(
-            scheme=scheme, total_time=float(t[b]),
-            round_times=round_times[b], planning_time=plan_clock[b],
-            plan=RepairPlan(jobs=plans[b].jobs, rounds=executed[b],
-                            meta=plans[b].meta),
-            relay_hops=relay_hops[b], log=logs[b],
+            scheme=schemes[b], total_time=float(t[b]),
+            round_times=rt[: rounds_of[b], b].tolist(),
+            planning_time=float(plan_clock[b]),
+            plan=decompile(arrays[b]) if keep_plans else None,
+            relay_hops=int(relay_hops[b]), log=logs[b],
         )
         for b in range(B)
     ]
+
+
+_BMF_SCHEMES = ("bmf", "msrepair", "bmf_static")
+
+
+def run_work_vectorized(
+    work: list[tuple[Scenario, str, int]],
+    *,
+    bmf_optimize_all: bool = False,
+    keep_plans: bool = True,
+) -> list[SimResult]:
+    """Run `(scenario, scheme, seed)` work rows through the batched engine.
+
+    This is the sweep engine's entry point: rows from *different schemes*
+    share execution batches. Every row is planned straight into
+    `PlanArrays` by the array-native planner layer — MSRepair rows
+    through the lockstep batch scheduler, everything else per row — and
+    all rows are lowered + validated in one array pass (no object plans,
+    no compile step, no planner-input dedup). Rows then group by
+    (cluster size, BMF replan mode): within a batch the steppers mask
+    per-case round counts (a case whose plan is exhausted sits out the
+    remaining rounds) and the per-round BMF re-optimization runs inside
+    the stepper. PPT rows take the pipeline engine; a row whose plan
+    cannot be lowered (term ids >= 64) falls back to the object engine.
+    Results come back in input order and match `run_scheme` row for row
+    (modulo wall-clock `planning_time`). `keep_plans=False` skips
+    decompiling executed plans back to objects — the sweep default,
+    since it strips plans anyway.
+    """
+    results: list[SimResult | None] = [None] * len(work)
+
+    ppt_groups: dict[int, list[int]] = {}
+    for i, (sc, scheme, _) in enumerate(work):
+        if scheme == "ppt":
+            ppt_groups.setdefault(sc.num_nodes, []).append(i)
+    for idxs in ppt_groups.values():
+        for i, r in zip(idxs, _run_ppt_batch([work[i][0] for i in idxs])):
+            results[i] = r
+
+    rows = [i for i, (_, scheme, _) in enumerate(work) if scheme != "ppt"]
+    items: dict[int, tuple] = {}
+    clocks: dict[int, float] = {}
+    recv_lims: dict[int, int] = {}
+    ms_rows = [i for i in rows if work[i][1] == "msrepair"]
+    if ms_rows:
+        # true batched planning: all MSRepair rows in one lockstep pass
+        jobs_list = [work[i][0].make_jobs() for i in ms_rows]
+        tic = _time.perf_counter()
+        scheds = msrepair_schedule_batch(jobs_list)
+        share = (_time.perf_counter() - tic) / len(ms_rows)
+        for i, jobs, sched in zip(ms_rows, jobs_list, scheds):
+            items[i] = (jobs, sched, {"scheme": "msrepair"})
+            clocks[i] = share
+            recv_lims[i] = 1
+    for i in rows:
+        if i in items:
+            continue
+        sc, scheme, seed = work[i]
+        jobs = sc.make_jobs()
+        recv_lims[i] = (len(jobs[0].helpers)
+                        if scheme == "traditional" else 1)
+        tic = _time.perf_counter()
+        items[i] = schedule_for_scheme(scheme, jobs, random_seed=seed)
+        clocks[i] = _time.perf_counter() - tic
+
+    pas = lower_schedules_batch(
+        [items[i] for i in rows],
+        max_recv_per_round=[recv_lims[i] for i in rows])
+    prepared = {i: pa for i, pa in zip(rows, pas) if pa is not None}
+    fallback = [i for i, pa in zip(rows, pas) if pa is None]
+
+    # planning was batched across schemes above; execution batches are per
+    # (cluster size, scheme): a scheme's cases share event structure, while
+    # mixing schemes with very different event counts (star fan-in vs tree
+    # rounds) would make short rows pay for the longest row's lockstep
+    groups: dict[tuple, list[int]] = {}
+    for i in prepared:
+        groups.setdefault((work[i][0].num_nodes, work[i][1]), []).append(i)
+    for (_, scheme), idxs in groups.items():
+        static = scheme == "bmf_static"
+        sims = _run_rounds_batch(
+            [work[i][0] for i in idxs],
+            [work[i][1] for i in idxs],
+            [prepared[i] for i in idxs],
+            [clocks[i] for i in idxs],
+            bmf_rows=np.array([work[i][1] in _BMF_SCHEMES for i in idxs]),
+            static_plan_time=static,
+            bmf_optimize_all=bmf_optimize_all,
+            keep_plans=keep_plans,
+        )
+        for i, r in zip(idxs, sims):
+            results[i] = r
+    for i in fallback:
+        sc, scheme, seed = work[i]
+        r = run_scheme(sc, scheme,
+                       bmf_optimize_all=bmf_optimize_all, random_seed=seed)
+        results[i] = r if keep_plans else dataclasses.replace(r, plan=None)
+    return results
 
 
 def run_scheme_vectorized(
@@ -542,87 +720,13 @@ def run_scheme_vectorized(
     *,
     seeds: list[int] | None = None,
     bmf_optimize_all: bool = False,
+    keep_plans: bool = True,
 ) -> list[SimResult]:
-    """Batched `run_scheme`: plan per case, execute in compatible batches.
-
-    Cases are grouped by (cluster size, round count) — the structural
-    compatibility the lockstep stepper needs — and each group runs through
-    the batched engine; a case whose plan cannot be lowered to arrays
-    falls back to the object engine. Results are returned in input order
-    and match `run_scheme` case for case (modulo wall-clock
-    `planning_time`). Because identical planner inputs are deduplicated,
-    the returned `SimResult.plan`s may share objects across cases — copy
-    before mutating (`run_sweep(keep_plans=True)` does this for you).
-    """
+    """Batched `run_scheme` for one scheme: see `run_work_vectorized`."""
     seeds = list(seeds) if seeds is not None else [0] * len(scenarios)
     if len(seeds) != len(scenarios):
         raise ValueError("seeds must match scenarios")
-    results: list[SimResult | None] = [None] * len(scenarios)
-
-    if scheme == "ppt":
-        groups: dict[tuple, list[int]] = {}
-        for i, sc in enumerate(scenarios):
-            groups.setdefault((sc.num_nodes,), []).append(i)
-        for idxs in groups.values():
-            for i, r in zip(idxs, _run_ppt_batch([scenarios[i] for i in idxs])):
-                results[i] = r
-        return results
-
-    prepared: dict[int, tuple] = {}
-    fallback: list[int] = []
-    # identical planner inputs yield identical plans — compile and validate
-    # each distinct (jobs, seed) once per batch. The cached plan's full
-    # planning cost is charged to every case sharing it (planning_time
-    # reports what a standalone run of that case would spend).
-    plan_cache: dict[tuple, tuple | None] = {}
-    for i, sc in enumerate(scenarios):
-        jobs = sc.make_jobs()
-        key = (
-            tuple((j.job_id, j.failed_node, j.requestor, j.helpers)
-                  for j in jobs),
-            seeds[i] if scheme == "random" else None,
-        )
-        hit = plan_cache.get(key, _MISSING)
-        if hit is _MISSING:
-            tic = _time.perf_counter()
-            plan = plan_for_scheme(scheme, jobs, random_seed=seeds[i])
-            clock = _time.perf_counter() - tic
-            try:
-                pa = compile_plan(plan)
-            except UnsupportedPlanError:
-                plan_cache[key] = None
-                fallback.append(i)
-                continue
-            validate_plan_arrays(
-                pa, max_recv_per_round=len(jobs[0].helpers)
-                if scheme == "traditional" else 1,
-            )
-            hit = (plan, pa, clock)
-            plan_cache[key] = hit
-        elif hit is None:
-            fallback.append(i)
-            continue
-        plan, pa, clock = hit
-        prepared[i] = (jobs, plan, pa, clock)
-
-    groups: dict[tuple, list[int]] = {}
-    for i, (_, plan, _, _) in prepared.items():
-        groups.setdefault((scenarios[i].num_nodes, plan.num_rounds),
-                          []).append(i)
-    for idxs in groups.values():
-        sims = _run_rounds_batch(
-            [scenarios[i] for i in idxs], scheme,
-            [prepared[i][1] for i in idxs],
-            [prepared[i][2] for i in idxs],
-            [prepared[i][0] for i in idxs],
-            [prepared[i][3] for i in idxs],
-            bmf_optimize_all=bmf_optimize_all,
-        )
-        for i, r in zip(idxs, sims):
-            results[i] = r
-    for i in fallback:
-        results[i] = run_scheme(
-            scenarios[i], scheme,
-            bmf_optimize_all=bmf_optimize_all, random_seed=seeds[i],
-        )
-    return results
+    return run_work_vectorized(
+        [(sc, scheme, seed) for sc, seed in zip(scenarios, seeds)],
+        bmf_optimize_all=bmf_optimize_all, keep_plans=keep_plans,
+    )

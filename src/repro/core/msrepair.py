@@ -14,12 +14,20 @@ the paper's Table II 3-round schedule for RS(7,4), see tests.
 
 Helper selection follows the paper: maximize |NR| (spread helper sets as
 disjointly as the survivor count allows).
+
+Since the array-native planner layer landed, this module is a thin object
+facade: the schedulers themselves live in
+`repro.core.engine.planner_arrays` (bitmask state, tuple transfers) and
+are shared with the vectorized engine's `PlanArrays` path; the functions
+here only wrap the tuple schedules back into `Round`/`Transfer` objects.
+The facade output is pinned bit-identical to the historical object walk
+by `tests/test_msrepair.py` and the oracle tests in
+`tests/test_planner_arrays.py`.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.plan import FragmentState, Job, RepairPlan, Round, Transfer
+from repro.core.engine import planner_arrays as _pa
+from repro.core.plan import Job, RepairPlan, Round, Transfer
 from repro.core.ppr import ppr_rounds
 
 
@@ -60,68 +68,24 @@ def node_sets(jobs: list[Job]) -> tuple[set[int], set[int], set[int]]:
 
 
 # ------------------------------------------------------------------ MSRepair
-_PRIORITY = (("R", "R"), ("R", "NR"), ("NR", "RP"), ("NR", "NR"), ("R", "RP"), ("NR", "R"))
+_PRIORITY = _pa._PRIORITY
+
+
+def _to_rounds(sched: _pa.Sched) -> list[Round]:
+    """Wrap a tuple schedule back into the object plan IR."""
+    from repro.core.engine.arrays import _mask_terms
+
+    return [
+        Round(transfers=[
+            Transfer(src=src, dst=dst, job=job_id, terms=_mask_terms(mask))
+            for src, dst, job_id, mask in rnd
+        ])
+        for rnd in sched
+    ]
 
 
 def msrepair_rounds(jobs: list[Job], *, max_rounds: int = 64) -> list[Round]:
-    r_set, nr_set, rp_set = node_sets(jobs)
-
-    def set_of(node: int) -> str:
-        if node in rp_set:
-            return "RP"
-        if node in r_set:
-            return "R"
-        if node in nr_set:
-            return "NR"
-        return "IDLE"
-
-    state = FragmentState(jobs)
-    job_by_id = {j.job_id: j for j in jobs}
-    rounds: list[Round] = []
-    for _ in range(max_rounds):
-        if state.all_done():
-            break
-        busy: set[int] = set()
-        rnd = Round()
-
-        def candidates_in(cls: tuple[str, str]) -> list[tuple]:
-            cands = []
-            for job_id, holders in state.holdings.items():
-                if state.job_done(job_id):
-                    continue
-                req = job_by_id[job_id].requestor
-                for src, terms in holders.items():
-                    if src in busy or set_of(src) != cls[0] or src == req:
-                        continue
-                    for dst in list(holders.keys()) + [req]:
-                        if dst == src or dst in busy or set_of(dst) != cls[1]:
-                            continue
-                        # useful: merge at dst, or delivery to requestor
-                        if dst != req and dst not in holders:
-                            continue
-                        load = sum(
-                            1 for h in state.holdings.values() if src in h
-                        )
-                        cands.append((-load, job_id, src, dst, frozenset(terms)))
-            cands.sort()
-            return cands
-
-        for cls in _PRIORITY:
-            while True:
-                cands = candidates_in(cls)
-                if not cands:
-                    break
-                _, job_id, src, dst, terms = cands[0]
-                tr = Transfer(src=src, dst=dst, job=job_id, terms=terms)
-                state.apply(tr)
-                rnd.transfers.append(tr)
-                busy.update((src, dst))
-        if not rnd.transfers:
-            raise RuntimeError("MSRepair stalled — no feasible transfer")
-        rounds.append(rnd)
-    else:
-        raise RuntimeError("MSRepair exceeded max_rounds")
-    return rounds
+    return _to_rounds(_pa.msrepair_schedule(jobs, max_rounds=max_rounds))
 
 
 def plan_msrepair(jobs: list[Job]) -> RepairPlan:
@@ -143,40 +107,6 @@ def plan_mppr(jobs: list[Job]) -> RepairPlan:
 def plan_random(jobs: list[Job], *, seed: int = 0, max_rounds: int = 256) -> RepairPlan:
     """Random scheduling baseline: each round greedily packs uniformly-random
     useful transfers (ignoring the priority classes)."""
-    rng = np.random.default_rng(seed)
-    state = FragmentState(jobs)
-    job_by_id = {j.job_id: j for j in jobs}
-    rounds: list[Round] = []
-    for _ in range(max_rounds):
-        if state.all_done():
-            break
-        busy: set[int] = set()
-        rnd = Round()
-        while True:
-            cands = []
-            for job_id, holders in state.holdings.items():
-                if state.job_done(job_id):
-                    continue
-                req = job_by_id[job_id].requestor
-                for src, terms in holders.items():
-                    if src in busy or src == req:
-                        continue
-                    for dst in list(holders.keys()) + [req]:
-                        if dst == src or dst in busy:
-                            continue
-                        if dst != req and dst not in holders:
-                            continue
-                        cands.append((job_id, src, dst, frozenset(terms)))
-            if not cands:
-                break
-            job_id, src, dst, terms = cands[int(rng.integers(len(cands)))]
-            tr = Transfer(src=src, dst=dst, job=job_id, terms=terms)
-            state.apply(tr)
-            rnd.transfers.append(tr)
-            busy.update((src, dst))
-        if not rnd.transfers:
-            raise RuntimeError("random scheduler stalled")
-        rounds.append(rnd)
-    else:
-        raise RuntimeError("random scheduler exceeded max_rounds")
+    rounds = _to_rounds(
+        _pa.random_schedule(jobs, seed=seed, max_rounds=max_rounds))
     return RepairPlan(jobs=jobs, rounds=rounds, meta={"scheme": "random"})

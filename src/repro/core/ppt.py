@@ -59,6 +59,12 @@ def build_ppt_tree(job: Job, bw0: np.ndarray) -> PPTTree:
     helper-to-helper links are weak, so PPT happily builds multi-sender
     nodes — which the *real* ingress behaviour (Fig. 2: degraded total,
     skewed split) then punishes. That modeling gap is the paper's critique.
+
+    This facade prices every (helper, attach-point) pair per greedy step
+    as one `(H, V)` array expression (planner-layer idiom) instead of the
+    historical nested-loop scan; the first-maximum argmax over the
+    helper-major layout reproduces the scan's strict-`>` tie-breaking, so
+    the tree built is identical.
     """
     root = job.requestor
     parent: dict[int, int] = {}
@@ -83,16 +89,20 @@ def build_ppt_tree(job: Job, bw0: np.ndarray) -> PPTTree:
         return bn
 
     while remaining:
-        best = None  # (rate, helper, attach_point)
-        for h in remaining:
-            for v in attached:
-                rate = min(
-                    edge_rate(h, v, extra_child=True),
-                    bottleneck_to_root(v) if v != root else float("inf"),
-                )
-                if best is None or rate > best[0]:
-                    best = (rate, h, v)
-        _, h, v = best
+        att = list(attached)       # iteration order == historical scan order
+        fan_in = np.array([len(children.get(v, ())) for v in att])
+        # candidate edge h -> v priced with h as an extra child of v
+        er = np.where(
+            fan_in[None, :] == 0,
+            bw0[np.ix_(remaining, att)],
+            capacity[att][None, :] / np.maximum(fan_in[None, :] + 1, 1),
+        )
+        btr = np.array([
+            bottleneck_to_root(v) if v != root else float("inf") for v in att
+        ])
+        rate = np.minimum(er, btr[None, :])
+        hi, vi = np.unravel_index(int(rate.argmax()), rate.shape)
+        h, v = remaining[hi], att[vi]
         parent[h] = v
         children.setdefault(v, []).append(h)
         children.setdefault(h, [])

@@ -48,18 +48,27 @@ class Scenario:
     helpers: tuple[tuple[int, ...], ...] | None = None  # per-job override
 
     def make_jobs(self) -> list[Job]:
-        failed = list(self.failed)
-        if self.helpers is not None:
-            helper_sets = [tuple(h) for h in self.helpers]
-        elif len(failed) == 1:
-            survivors = [x for x in range(self.code.n) if x not in failed]
-            helper_sets = [tuple(survivors[: self.code.k])]
-        else:
-            helper_sets = select_helpers_multi(self.code.n, self.code.k, failed)
-        return [
-            Job(job_id=i, failed_node=f, requestor=f, helpers=helper_sets[i])
-            for i, f in enumerate(failed)
-        ]
+        # helper selection is a pure function of the (frozen) scenario and
+        # is requested once per scheme — memoize the Job prototypes and
+        # hand out a fresh list each call (Jobs themselves are read-only)
+        jobs = getattr(self, "_jobs_cache", None)
+        if jobs is None:
+            failed = list(self.failed)
+            if self.helpers is not None:
+                helper_sets = [tuple(h) for h in self.helpers]
+            elif len(failed) == 1:
+                survivors = [x for x in range(self.code.n) if x not in failed]
+                helper_sets = [tuple(survivors[: self.code.k])]
+            else:
+                helper_sets = select_helpers_multi(
+                    self.code.n, self.code.k, failed)
+            jobs = [
+                Job(job_id=i, failed_node=f, requestor=f,
+                    helpers=helper_sets[i])
+                for i, f in enumerate(failed)
+            ]
+            object.__setattr__(self, "_jobs_cache", jobs)
+        return list(jobs)
 
 
 @dataclasses.dataclass

@@ -15,10 +15,11 @@ avoided.
 from __future__ import annotations
 
 import concurrent.futures
-import copy
 import dataclasses
+import math
 import multiprocessing
 import os
+import warnings
 from collections.abc import Callable, Sequence
 
 import numpy as np
@@ -197,11 +198,28 @@ def _spawn_safe() -> bool:
     return bool(path) and os.path.exists(path)
 
 
-def _resolve_executor(executor: str, num_items: int) -> str:
+# Spawn amortization: a spawned worker must be fed at least this many
+# cases to pay for its interpreter start-up + imports (~0.5 s each on this
+# stack); below it a process pool is strictly slower than the serial loop
+# (the regression BENCH_sweep.json documented: 0.04-0.37x serial on
+# 60-case suites, where even a 3-worker pool loses 20x to its own spawns).
+_MIN_CASES_PER_WORKER = 64
+
+
+def _process_workers(num_items: int, max_workers: int | None) -> int:
+    """Worker count for the process executor: never more than the spawn
+    amortization threshold can feed. 0 means 'do not spawn — go serial'."""
+    cap = max_workers or os.cpu_count() or 1
+    return min(cap, num_items // _MIN_CASES_PER_WORKER)
+
+
+def _resolve_executor(executor: str, num_items: int,
+                      max_workers: int | None = None) -> str:
     if executor != "auto":
         return executor
     cpus = os.cpu_count() or 1
-    if cpus > 1 and num_items >= 8 and _spawn_safe():
+    if (cpus > 1 and _process_workers(num_items, max_workers) > 1
+            and _spawn_safe()):
         return "process"
     return "serial"
 
@@ -222,8 +240,10 @@ def run_sweep(
     otherwise each case runs `case.schemes or suite.schemes`. Executors:
     "serial", "thread", "process", "vectorized" (batched array engine —
     compatible cases step through `repro.core.engine` together) or "auto"
-    (process pool for >= 8 cases on a multi-core host). Output is
-    independent of the executor choice.
+    (process pool on a multi-core host once the sweep is large enough to
+    amortize worker spawn — at least `2 * _MIN_CASES_PER_WORKER` cases;
+    an explicit "process" below that threshold warns and runs serial).
+    Output is independent of the executor choice.
     """
     cases = list(suite.cases())
     work = [
@@ -231,7 +251,16 @@ def run_sweep(
          else (case.schemes or tuple(suite.schemes)))
         for case in cases
     ]
-    mode = _resolve_executor(executor, len(work))
+    mode = _resolve_executor(executor, len(work), max_workers)
+    if mode == "process":
+        workers = _process_workers(len(work), max_workers)
+        if workers < 2:
+            warnings.warn(
+                f"process executor: {len(work)} cases cannot amortize "
+                f"worker spawn cost (< {2 * _MIN_CASES_PER_WORKER} cases); "
+                "falling back to serial",
+                RuntimeWarning, stacklevel=2)
+            mode = "serial"
 
     def jobs():
         for case, case_schemes in work:
@@ -246,8 +275,9 @@ def run_sweep(
             results = list(pool.map(lambda args: _run_case(*args), jobs()))
     elif mode == "process":
         ctx = multiprocessing.get_context(mp_context)
-        workers = max_workers or os.cpu_count() or 1
-        chunk = max(1, len(work) // (workers * 4))
+        # few large tasks, not many tiny ones: each submitted task carries
+        # a chunk of cases so per-task IPC/pickling is amortized too
+        chunk = max(1, math.ceil(len(work) / (workers * 2)))
         with concurrent.futures.ProcessPoolExecutor(
                 max_workers=workers, mp_context=ctx) as pool:
             results = list(pool.map(
@@ -275,34 +305,27 @@ def _run_vectorized(
     """Dispatch work through the batched array engine, scheme by scheme.
 
     Cases sharing a scheme are handed to `run_scheme_vectorized`, which
+    plans every case directly in `PlanArrays` space (true batched
+    planning — each case owns its plan, no dedup/copy workarounds),
     groups them into structurally compatible batches (same cluster size
     and round count) and falls back to the object engine per case when a
     plan cannot be lowered to arrays. Results are identical to the serial
     executor (the engine parity tests pin this), only wall-clock changes.
     """
-    from repro.core.engine.vectorized import run_scheme_vectorized
+    from repro.core.engine.vectorized import run_work_vectorized
 
-    per_scheme: dict[str, list[int]] = {}
-    for pos, (_, case_schemes) in enumerate(work):
+    flat: list[tuple[int, str]] = []
+    rows = []
+    for pos, (case, case_schemes) in enumerate(work):
         for s in case_schemes:
-            per_scheme.setdefault(s, []).append(pos)
+            flat.append((pos, s))
+            rows.append((case.scenario, s, case.seed))
 
     by_pos: list[dict[str, SimResult]] = [{} for _ in work]
-    for scheme, positions in per_scheme.items():
-        sims = run_scheme_vectorized(
-            [work[p][0].scenario for p in positions], scheme,
-            seeds=[work[p][0].seed for p in positions],
-            bmf_optimize_all=bmf_optimize_all,
-        )
-        for p, r in zip(positions, sims):
-            if keep_plans:
-                # the engine dedupes identical planner inputs, so kept
-                # plans may share objects across cases — give each case
-                # its own copy to match serial-executor ownership
-                r = dataclasses.replace(r, plan=copy.deepcopy(r.plan))
-            else:
-                r = _strip(r)
-            by_pos[p][scheme] = r
+    sims = run_work_vectorized(rows, bmf_optimize_all=bmf_optimize_all,
+                               keep_plans=keep_plans)
+    for (pos, scheme), r in zip(flat, sims):
+        by_pos[pos][scheme] = r if keep_plans else _strip(r)
     return [
         CaseResult(
             index=case.index, seed=case.seed, params=dict(case.params),

@@ -108,3 +108,25 @@ def test_bmf_stats_report_savings():
     assert stats.improved_links == 1
     assert new_rnd.transfers[0].path in ((0, 2, 1), (0, 3, 1))
     assert stats.time_saved > 15.0
+
+
+def test_bmf_stats_attribute_bottleneck_vs_extra():
+    """`time_saved` splits into the Algorithm-1 bottleneck loop and the
+    beyond-paper optimize_all pass, so ablations can attribute gains.
+    (Twin of the non-hypothesis-gated version in test_planner_arrays.)"""
+    bw = np.full((6, 6), 1.0)
+    np.fill_diagonal(bw, 0.0)
+    bw[0, 1] = 2.0                    # bottleneck: direct 10s
+    bw[0, 4] = bw[4, 1] = 5.0         # ... 0->4->1 takes 8s, still worst
+    bw[2, 3] = 4.0                    # secondary: direct 5s ...
+    bw[2, 5] = bw[5, 3] = 20.0        # ... 2->5->3 takes 2s (extra pass)
+    rnd = _round([(0, 1), (2, 3)])
+    _, plain = optimize_round(rnd, bw, [4, 5], 20.0)
+    assert plain.time_saved_bottleneck > 0
+    assert plain.time_saved_extra == 0.0
+    assert plain.time_saved == plain.time_saved_bottleneck
+    _, both = optimize_round(rnd, bw, [4, 5], 20.0, optimize_all=True)
+    assert both.time_saved_bottleneck == plain.time_saved_bottleneck
+    assert both.time_saved_extra > 0
+    assert both.time_saved == pytest.approx(
+        both.time_saved_bottleneck + both.time_saved_extra)

@@ -1,0 +1,437 @@
+"""Array-native planner layer: batched search/scheduler parity + mutation.
+
+Pins the planner layer three ways:
+ * the batched BMF path search against brute-force enumeration (the same
+   oracle the scalar DFS is pinned to),
+ * the tuple/batched schedulers against in-test re-implementations of the
+   historical object walks (candidates recomputed after every pick),
+ * the whole batched planner, end to end, against the object planners
+   across every scheme and all three volatility regimes.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.bandwidth import BandwidthProcess, IngressModel
+from repro.core.bmf import optimize_round, path_time
+from repro.core.engine.arrays import (UnsupportedPlanError, decompile,
+                                      splice_path, validate_plan_arrays)
+from repro.core.engine.planner_arrays import (find_min_time_paths_batch,
+                                              hop_time_stack,
+                                              lower_schedules_batch,
+                                              msrepair_schedule,
+                                              msrepair_schedule_batch,
+                                              optimize_round_batch,
+                                              plan_arrays_for_scheme,
+                                              random_schedule,
+                                              schedule_for_scheme)
+from repro.core.engine.vectorized import run_scheme_vectorized
+from repro.core.msrepair import select_helpers_multi
+from repro.core.plan import FragmentState, Job, Round, Transfer
+from repro.core.simulator import ALL_SCHEMES, Scenario, plan_for_scheme, run_scheme
+from repro.ec.rs import RSCode
+
+RTOL = 1e-6
+
+
+# ------------------------------------------------------- batched BMF search
+def brute_force_best(src, dst, idle, bw, chunk):
+    """Oracle: enumerate every relay permutation of every subset."""
+    best = (src, dst)
+    best_t = path_time(best, bw, chunk)
+    for r in range(1, len(idle) + 1):
+        for subset in itertools.permutations(idle, r):
+            path = (src, *subset, dst)
+            t = path_time(path, bw, chunk)
+            if t < best_t:
+                best, best_t = path, t
+    return best, best_t
+
+
+def _search_one(src, dst, idle, bw, chunk, bound):
+    n = bw.shape[0]
+    avail = np.zeros((1, n), dtype=bool)
+    avail[0, idle] = True
+    w = hop_time_stack(bw[None], np.array([chunk]))
+    paths, times, improved = find_min_time_paths_batch(
+        np.array([src]), np.array([dst]), avail, w, np.array([bound]),
+        bw_stack=bw[None], chunk_mb=np.array([chunk]))
+    return paths[0], float(times[0]), bool(improved[0])
+
+
+def test_batched_search_property_vs_bruteforce():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(0, 500), st.integers(4, 7))
+    @settings(max_examples=60, deadline=None)
+    def check(seed, n):
+        bw = topology.heterogeneous_matrix(n, low=1, high=30, seed=seed)
+        idle = list(range(2, n))
+        want_path, want_t = brute_force_best(0, 1, idle, bw, 16.0)
+        got_path, got_t, _ = _search_one(0, 1, idle, bw, 16.0, np.inf)
+        assert abs(got_t - want_t) < 1e-9
+        assert abs(path_time(got_path, bw, 16.0) - want_t) < 1e-9
+
+    check()
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_batched_search_vs_bruteforce_deterministic(seed):
+    """Non-hypothesis twin of the property test (runs on bare installs):
+    clusters <= 7 nodes, full permutation oracle, tie-heavy variant."""
+    for n in (5, 7):
+        bw = topology.heterogeneous_matrix(n, low=1, high=30, seed=seed)
+        if seed % 3 == 0:
+            bw = np.round(bw / 6) * 6
+        idle = list(range(2, n))
+        want_path, want_t = brute_force_best(0, 1, idle, bw, 16.0)
+        got_path, got_t, _ = _search_one(0, 1, idle, bw, 16.0, np.inf)
+        assert got_path == want_path or abs(got_t - want_t) < 1e-12
+        assert abs(path_time(got_path, bw, 16.0) - want_t) < 1e-9
+
+
+def test_batched_search_deep_optimum_falls_back_to_dfs():
+    """A 4-relay optimum exceeds the enumeration depth; the Bellman-Ford
+    certificate must detect it and the scalar fallback must return it."""
+    n = 7
+    bw = np.full((n, n), 0.1)
+    np.fill_diagonal(bw, 0.0)
+    for u, v in [(0, 2), (2, 3), (3, 4), (4, 5), (5, 1)]:
+        bw[u, v] = 1000.0
+    path, t, improved = _search_one(0, 1, [2, 3, 4, 5, 6], bw, 16.0, np.inf)
+    assert path == (0, 2, 3, 4, 5, 1) and improved
+    assert t == pytest.approx(path_time(path, bw, 16.0))
+
+
+def test_batched_search_respects_bound():
+    bw = topology.uniform_matrix(5, 10.0)
+    path, t, improved = _search_one(0, 1, [2, 3, 4], bw, 10.0, 0.5)
+    assert path == (0, 1) and not improved and t == 0.5
+
+
+def test_optimize_round_batch_matches_object():
+    rng = np.random.default_rng(5)
+    for trial in range(40):
+        n = int(rng.integers(8, 14))
+        bw = topology.heterogeneous_matrix(n, low=1, high=40, seed=trial)
+        if trial % 4 == 0:
+            bw = np.round(bw / 6) * 6          # force rate ties
+        pairs = [(1, 0), (3, 2)]
+        rnd = Round(transfers=[
+            Transfer(src=s, dst=d, job=0, terms=frozenset({s}))
+            for s, d in pairs])
+        idle = [x for x in range(n) if x not in {0, 1, 2, 3}]
+        for opt_all in (False, True):
+            ref, stats = optimize_round(rnd, bw, list(idle), 16.0,
+                                        optimize_all=opt_all)
+            T = len(pairs)
+            hop_u = np.zeros((1, T, 1), dtype=np.int64)
+            hop_v = np.zeros_like(hop_u)
+            n_hops = np.ones((1, T), dtype=np.int64)
+            for i, (s, d) in enumerate(pairs):
+                hop_u[0, i, 0], hop_v[0, i, 0] = s, d
+            avail = np.zeros((1, n), dtype=bool)
+            avail[0, idle] = True
+            hu, hv, bstats, _ = optimize_round_batch(
+                hop_u, hop_v, n_hops, bw[None], np.array([16.0]), avail,
+                optimize_all=opt_all)
+            for i, tr in enumerate(ref.transfers):
+                nh = int(n_hops[0, i])
+                got = tuple(int(x) for x in hu[0, i, :nh]) \
+                    + (int(hv[0, i, nh - 1]),)
+                assert got == tr.path, (trial, opt_all, i)
+            assert int(bstats.improved_links[0]) == stats.improved_links
+            assert float(bstats.time_saved[0]) == stats.time_saved
+            assert (float(bstats.time_saved_bottleneck[0])
+                    == stats.time_saved_bottleneck)
+            assert (float(bstats.time_saved_extra[0])
+                    == stats.time_saved_extra)
+
+
+def test_bmf_stats_time_saved_split():
+    """`BMFStats.time_saved` = bottleneck-loop + optimize_all shares, each
+    accounted separately so the ablation benchmark can attribute gains."""
+    bw = np.full((6, 6), 1.0)
+    np.fill_diagonal(bw, 0.0)
+    bw[0, 1] = 2.0                    # bottleneck: direct 10s
+    bw[0, 4] = bw[4, 1] = 5.0         # ... 0->4->1 takes 8s, still worst
+    bw[2, 3] = 4.0                    # secondary: direct 5s ...
+    bw[2, 5] = bw[5, 3] = 20.0        # ... 2->5->3 takes 2s (extra pass)
+    rnd = Round(transfers=[
+        Transfer(src=0, dst=1, job=0, terms=frozenset({0})),
+        Transfer(src=2, dst=3, job=0, terms=frozenset({2})),
+    ])
+    _, plain = optimize_round(rnd, bw, [4, 5], 20.0)
+    assert plain.time_saved_bottleneck > 0
+    assert plain.time_saved_extra == 0.0
+    assert plain.time_saved == plain.time_saved_bottleneck
+    _, both = optimize_round(rnd, bw, [4, 5], 20.0, optimize_all=True)
+    assert both.time_saved_bottleneck == plain.time_saved_bottleneck
+    assert both.time_saved_extra > 0
+    assert both.time_saved == pytest.approx(
+        both.time_saved_bottleneck + both.time_saved_extra)
+
+
+# ------------------------------------------------ scheduler oracle pinning
+def _msrepair_reference(jobs, *, max_rounds=64):
+    """The historical object walk: candidates recomputed after every pick."""
+    from repro.core.msrepair import node_sets
+
+    r_set, nr_set, rp_set = node_sets(jobs)
+
+    def set_of(node):
+        if node in rp_set:
+            return "RP"
+        if node in r_set:
+            return "R"
+        if node in nr_set:
+            return "NR"
+        return "IDLE"
+
+    state = FragmentState(jobs)
+    job_by_id = {j.job_id: j for j in jobs}
+    rounds = []
+    priority = (("R", "R"), ("R", "NR"), ("NR", "RP"), ("NR", "NR"),
+                ("R", "RP"), ("NR", "R"))
+    for _ in range(max_rounds):
+        if state.all_done():
+            break
+        busy, rnd = set(), Round()
+
+        def candidates_in(cls):
+            cands = []
+            for job_id, holders in state.holdings.items():
+                if state.job_done(job_id):
+                    continue
+                req = job_by_id[job_id].requestor
+                for src, terms in holders.items():
+                    if src in busy or set_of(src) != cls[0] or src == req:
+                        continue
+                    for dst in list(holders.keys()) + [req]:
+                        if dst == src or dst in busy or set_of(dst) != cls[1]:
+                            continue
+                        if dst != req and dst not in holders:
+                            continue
+                        load = sum(1 for h in state.holdings.values()
+                                   if src in h)
+                        cands.append((-load, job_id, src, dst,
+                                      frozenset(terms)))
+            cands.sort()
+            return cands
+
+        for cls in priority:
+            while True:
+                cands = candidates_in(cls)
+                if not cands:
+                    break
+                _, job_id, src, dst, terms = cands[0]
+                tr = Transfer(src=src, dst=dst, job=job_id, terms=terms)
+                state.apply(tr)
+                rnd.transfers.append(tr)
+                busy.update((src, dst))
+        rounds.append(rnd)
+    return rounds
+
+
+def _mask_terms(mask):
+    out, m = [], int(mask)
+    while m:
+        b = m & -m
+        out.append(b.bit_length() - 1)
+        m ^= b
+    return frozenset(out)
+
+
+def _multi_jobs(seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, 6))
+    n = int(rng.integers(k + 2, k + 7))
+    nf = int(rng.integers(2, min(4, n - k) + 1))
+    failed = sorted(rng.choice(n, size=nf, replace=False).tolist())
+    helpers = select_helpers_multi(n, k, failed)
+    return [Job(job_id=i, failed_node=f, requestor=f, helpers=helpers[i])
+            for i, f in enumerate(failed)]
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_msrepair_schedulers_match_reference_walk(seed):
+    jobs = _multi_jobs(seed)
+    want = _msrepair_reference(jobs)
+    got_tuple = msrepair_schedule(jobs)
+    got_batch = msrepair_schedule_batch([jobs])[0]
+    assert got_tuple == got_batch
+    assert len(got_tuple) == len(want)
+    for rnd_t, rnd_w in zip(got_tuple, want):
+        assert [(s, d, j, _mask_terms(m)) for s, d, j, m in rnd_t] == \
+            [(t.src, t.dst, t.job, t.terms) for t in rnd_w.transfers]
+
+
+def test_msrepair_batch_mixed_cases_and_fallback():
+    batch = [_multi_jobs(s) for s in range(8)]
+    batch.append([Job(job_id=0, failed_node=0, requestor=0,
+                      helpers=(65, 66)),
+                  Job(job_id=1, failed_node=1, requestor=1,
+                      helpers=(66, 67))])  # ids >= 64: tuple fallback
+    got = msrepair_schedule_batch(batch)
+    for jobs, sched in zip(batch, got):
+        assert sched == msrepair_schedule(jobs)
+
+
+def test_random_schedule_preserves_rng_draw_sequence():
+    """The filtered candidate list must match a per-pick recompute, so the
+    rng consumption (and thus the schedule) is unchanged."""
+    for seed in range(10):
+        jobs = _multi_jobs(seed + 100)
+        a = random_schedule(jobs, seed=seed)
+        b = random_schedule(jobs, seed=seed)
+        assert a == b
+        plan = plan_for_scheme("random", jobs, random_seed=seed)
+        got = [[(t.src, t.dst, t.job, t.terms) for t in rnd.transfers]
+               for rnd in plan.rounds]
+        want = [[(s, d, j, _mask_terms(m)) for s, d, j, m in rnd]
+                for rnd in a]
+        assert got == want
+
+
+# ---------------------------------------------------- lowering + validation
+def test_plan_arrays_for_scheme_matches_object_planners():
+    sjob = [Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2, 3))]
+    mjobs = _multi_jobs(3)
+    for scheme, jobs in [("traditional", sjob), ("ppr", sjob),
+                         ("bmf", sjob), ("mppr", mjobs),
+                         ("random", mjobs), ("msrepair", mjobs)]:
+        pa = plan_arrays_for_scheme(scheme, list(jobs), random_seed=7)
+        assert decompile(pa) == plan_for_scheme(scheme, list(jobs),
+                                                random_seed=7)
+
+
+def test_lower_schedules_batch_views_and_unsupported():
+    items = [schedule_for_scheme("msrepair", _multi_jobs(s))
+             for s in range(5)]
+    big = [Job(job_id=0, failed_node=0, requestor=0, helpers=(70, 71, 72))]
+    items.append(schedule_for_scheme("ppr", big))
+    pas = lower_schedules_batch(items)
+    assert pas[-1] is None                      # term ids >= 64: fallback
+    for (jobs, sched, meta), pa in zip(items[:-1], pas[:-1]):
+        assert pa is not None
+        validate_plan_arrays(pa)
+        assert decompile(pa).meta == meta
+    with pytest.raises(UnsupportedPlanError):
+        plan_arrays_for_scheme("ppr", big)
+
+
+def test_lower_schedules_batch_rejects_invalid():
+    jobs = [Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2))]
+    # node 1 sends twice in one round
+    bad = [[(1, 0, 0, 1 << 1), (1, 3, 0, 1 << 2)]]
+    with pytest.raises(ValueError):
+        lower_schedules_batch([(jobs, bad, {"scheme": "x"})])
+
+
+# ----------------------------------------------------- PlanArrays mutation
+def test_splice_path_widens_and_validates():
+    jobs = [Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2))]
+    sched = [[(1, 0, 0, 1 << 1)], [(2, 0, 0, 1 << 2)]]
+    pa = lower_schedules_batch([(jobs, sched, {"scheme": "x"})])[0]
+    assert pa.t_path.shape[1] == 2
+    splice_path(pa, 0, (1, 5, 6, 0))            # widens the path axis
+    assert pa.t_path.shape[1] == 4
+    assert pa.num_nodes >= 7
+    validate_plan_arrays(pa)                    # relayed plan still valid
+    plan = decompile(pa)
+    assert plan.rounds[0].transfers[0].path == (1, 5, 6, 0)
+    with pytest.raises(ValueError):
+        splice_path(pa, 0, (1, 5))              # endpoint mismatch
+    with pytest.raises(ValueError):
+        splice_path(pa, 0, (1, 5, 5, 0))        # cyclic
+    # a relay colliding with the round's receiver must fail full validation
+    splice_path(pa, 0, (1, 0))
+    splice_path(pa, 1, (2, 0))
+    splice_path(pa, 0, (1, 2, 0))               # relay 2 sends in round 2?
+    validate_plan_arrays(pa)                    # different rounds: fine
+    splice_path(pa, 1, (2, 1, 0))               # 1 already sent in round 1?
+    validate_plan_arrays(pa)                    # different rounds: fine
+
+
+def test_batched_search_exact_tie_prefers_dfs_preorder_route():
+    """Regression: with exact-tie hop sums (power-of-two bandwidths) the
+    depth-3 block must still be priced — the DFS pre-order prefers the
+    deeper route on a tie, and skipping d3 on `4*minw == best2` diverged
+    from the scalar search."""
+    n = 6
+    bw = np.zeros((n, n))
+    for u, v in [(0, 2), (2, 3), (3, 4), (4, 1)]:
+        bw[u, v] = 4.0                    # four 0.25s hops = 1.0s
+    bw[0, 5] = bw[5, 1] = 2.0             # two 0.5s hops = 1.0s
+    from repro.core.bmf import find_min_time_path
+
+    want = find_min_time_path(0, 1, [2, 3, 4, 5], bw, 1.0, np.inf)
+    got_path, got_t, _ = _search_one(0, 1, [2, 3, 4, 5], bw, 1.0, np.inf)
+    assert (got_path, got_t) == want
+    assert got_path == (0, 2, 3, 4, 1)    # the deeper pre-order winner
+
+
+def test_bmf_replan_excludes_all_failed_nodes_in_multi_failure_scenarios():
+    """Regression: for bmf/bmf_static the compiled plan carries only the
+    first job, but the batched replanner's idle pool must still exclude
+    every failed node of the scenario (as `simulator._idle_pool` does) —
+    otherwise the vectorized engine relays repair traffic through a
+    failed node."""
+    cluster = 10
+    base = topology.heterogeneous_matrix(cluster, low=3, high=30, seed=0)
+    base[:, 1] = base[1, :] = 100.0       # failed node 1: tempting relay
+    np.fill_diagonal(base, 0.0)
+    bwp = BandwidthProcess(base=base, change_interval=None)
+    sc = Scenario(num_nodes=cluster, code=RSCode(7, 4), failed=(0, 1),
+                  bw=bwp, ingress=IngressModel(seed=0), chunk_mb=16.0,
+                  helpers=((2, 3, 4, 5), (3, 4, 5, 6)))
+    for scheme in ("bmf", "bmf_static"):
+        ref = run_scheme(sc, scheme)
+        got = run_scheme_vectorized([sc], scheme)[0]
+        assert got.relay_hops == ref.relay_hops, scheme
+        assert got.total_time == pytest.approx(ref.total_time, rel=RTOL)
+        assert got.plan == ref.plan, scheme
+        for rnd in got.plan.rounds:       # and 1 truly never relays
+            for tr in rnd.transfers:
+                assert 1 not in tr.relays
+
+
+# --------------------------------- end-to-end parity across regimes/schemes
+def _scenario(regime, n, k, failed, seed, cluster=10, chunk=8.0):
+    base = topology.heterogeneous_matrix(cluster, low=3, high=30, seed=seed)
+    modes = {
+        "jitter": dict(mode="jitter", jitter=0.5),
+        "redraw": dict(mode="redraw"),
+        "markov": dict(mode="markov"),
+    }
+    bwp = BandwidthProcess(base=base, change_interval=2.0, seed=seed,
+                           **modes[regime])
+    return Scenario(num_nodes=cluster, code=RSCode(n, k), failed=failed,
+                    bw=bwp, ingress=IngressModel(seed=seed), chunk_mb=chunk)
+
+
+@pytest.mark.parametrize("regime", ["jitter", "redraw", "markov"])
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_batched_planner_parity_all_schemes_all_regimes(regime, scheme):
+    """The batched planner layer must pin plans — round counts, relay
+    hops, repair times at 1e-6 rtol, and the executed plans themselves —
+    to the object planners, for every scheme under every volatility
+    regime (the acceptance suite for the array-native planner layer)."""
+    failed = (0, 1) if scheme in ("mppr", "random", "msrepair") else (0,)
+    seeds = list(range(4))
+    scs = [_scenario(regime, 7, 4, failed, seed=s) for s in seeds]
+    ref = [run_scheme(sc, scheme, random_seed=s)
+           for s, sc in zip(seeds, scs)]
+    got = run_scheme_vectorized(scs, scheme, seeds=seeds)
+    for s, (a, b) in enumerate(zip(ref, got)):
+        label = f"{scheme}/{regime}/seed={s}"
+        assert b.num_rounds == a.num_rounds, label
+        assert b.relay_hops == a.relay_hops, label
+        assert b.total_time == pytest.approx(a.total_time, rel=RTOL), label
+        for x, y in zip(a.round_times, b.round_times):
+            assert y == pytest.approx(x, rel=RTOL, abs=1e-9), label
+        assert b.log == a.log, label
+        assert b.plan == a.plan, label

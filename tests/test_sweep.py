@@ -90,6 +90,42 @@ def test_executors_match_serial(executor):
             assert cr.results[s].round_times == cg.results[s].round_times
 
 
+def test_process_pool_path_matches_serial(monkeypatch):
+    """Exercise the real ProcessPoolExecutor branch (chunked pool.map,
+    Scenario pickling incl. the memoized jobs cache) by dropping the
+    spawn-amortization threshold below the suite size."""
+    import repro.sim.sweep as sweep_mod
+
+    monkeypatch.setattr(sweep_mod, "_MIN_CASES_PER_WORKER", 1)
+    suite = _small_mc_suite(num=6)
+    ref = run_sweep(suite, executor="serial")
+    got = run_sweep(suite, executor="process", max_workers=2)
+    for cr, cg in zip(ref.cases, got.cases):
+        assert set(cr.results) == set(cg.results)
+        for s in cr.results:
+            assert cr.results[s].total_time == cg.results[s].total_time
+            assert cr.results[s].round_times == cg.results[s].round_times
+
+
+def test_process_executor_spawn_amortization_fallback():
+    """Below the spawn-amortization threshold the process executor must
+    warn and fall back to serial (identical results) instead of paying
+    ~0.5 s of worker start-up per handful of cases."""
+    import repro.sim.sweep as sweep_mod
+
+    suite = _small_mc_suite(num=6)
+    ref = run_sweep(suite, executor="serial")
+    with pytest.warns(RuntimeWarning, match="spawn"):
+        got = run_sweep(suite, executor="process", max_workers=2)
+    for cr, cg in zip(ref.cases, got.cases):
+        for s in cr.results:
+            assert cr.results[s].total_time == cg.results[s].total_time
+    # worker sizing: never more workers than the threshold can feed
+    assert sweep_mod._process_workers(6, None) == 0
+    thresh = sweep_mod._MIN_CASES_PER_WORKER
+    assert sweep_mod._process_workers(4 * thresh, None) <= 4
+
+
 # ------------------------------------------------------- suite generators
 def test_grid_suite_covers_product():
     built = []
