@@ -8,9 +8,11 @@ Since the sweep engine landed, each figure is a *declarative suite
 definition* (a `GridSuite`/`MonteCarloSuite` in its bench module) executed
 by one `repro.sim.sweep.run_sweep` call; this module keeps the scenario
 factories, the CSV row type, and a legacy-compatible `run_trials` wrapper.
-Set REPRO_SWEEP_EXECUTOR=serial|thread|process|vectorized|auto to pick the
-dispatcher (default vectorized: the batched array engine from
-`repro.core.engine`, which matches the serial executor case for case).
+Set REPRO_SWEEP_EXECUTOR=serial|thread|process|vectorized|jax|auto to
+pick the dispatcher (default vectorized: the batched array engine from
+`repro.core.engine`, which matches the serial executor case for case;
+jax runs the same engine with the jit device steppers from
+`repro.core.engine.jax_stepper`, still case-for-case identical).
 """
 from __future__ import annotations
 

@@ -1,17 +1,21 @@
 """Docs link-and-snippet check.
 
-1. Executes every ```python code block in README.md top to bottom (shared
-   namespace), so the quickstart keeps running exactly as written.
+1. Executes every ```python code block in README.md and docs/*.md top to
+   bottom (one shared namespace per file), so the quickstarts and the
+   engine-guide walkthroughs keep running exactly as written.
 2. Verifies that every repo path (src/..., benchmarks/..., examples/...,
    tests/..., docs/...) referenced in README.md and docs/*.md exists.
 3. Verifies that every dotted `repro.*` module reference resolves to a
    real module file or package under src/.
+4. Runs the executor quickstart `examples/jax_sweep.py` as a subprocess,
+   so the README's backend walkthrough cannot rot.
 
 Run from the repo root (CI does):  python scripts/check_docs.py
 """
 from __future__ import annotations
 
 import re
+import subprocess
 import sys
 from pathlib import Path
 
@@ -64,23 +68,53 @@ def check_modules() -> list[str]:
     return errors
 
 
-def run_readme_snippets() -> list[str]:
+def run_doc_snippets() -> list[str]:
     sys.path.insert(0, str(SRC))
-    text = (ROOT / "README.md").read_text()
-    namespace: dict = {"__name__": "__readme__"}
     errors = []
-    for i, block in enumerate(CODE_BLOCK_RE.findall(text), 1):
-        print(f"-- executing README python block {i} ({len(block.splitlines())} lines)")
+    for doc in doc_files():
+        text = doc.read_text()
+        namespace: dict = {"__name__": f"__{doc.stem}__"}
+        for i, block in enumerate(CODE_BLOCK_RE.findall(text), 1):
+            print(f"-- executing {doc.name} python block {i} "
+                  f"({len(block.splitlines())} lines)")
+            try:
+                exec(compile(block, f"{doc.name}:block{i}", "exec"), namespace)
+            except Exception as e:  # noqa: BLE001 - report, don't crash
+                errors.append(f"{doc.name} python block {i} failed: {e!r}")
+    return errors
+
+
+# example scripts doubling as executable documentation (README refers to
+# them); each runs in a subprocess with src/ on the path
+EXAMPLE_SCRIPTS = ("examples/jax_sweep.py",)
+
+
+def run_example_scripts() -> list[str]:
+    import os
+
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for rel in EXAMPLE_SCRIPTS:
+        print(f"-- running {rel}")
         try:
-            exec(compile(block, f"README.md:block{i}", "exec"), namespace)
-        except Exception as e:  # noqa: BLE001 - report, don't crash the check
-            errors.append(f"README.md python block {i} failed: {e!r}")
+            proc = subprocess.run([sys.executable, str(ROOT / rel)],
+                                  env=env, cwd=ROOT, capture_output=True,
+                                  text=True, timeout=600)
+        except subprocess.TimeoutExpired:
+            errors.append(f"{rel} timed out after 600s")
+            continue
+        if proc.returncode != 0:
+            errors.append(f"{rel} exited {proc.returncode}: "
+                          f"{proc.stderr.strip()[-400:]}")
     return errors
 
 
 def main() -> int:
     errors = check_paths() + check_modules()
-    errors += run_readme_snippets()
+    errors += run_doc_snippets()
+    errors += run_example_scripts()
     if errors:
         print("\n".join(f"ERROR: {e}" for e in errors))
         return 1

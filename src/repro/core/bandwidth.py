@@ -67,6 +67,7 @@ class BandwidthProcess:
         object.__setattr__(self, "_innov_cache", {})
         object.__setattr__(self, "_ar_cache", {})
         object.__setattr__(self, "_block_cache", {})
+        object.__setattr__(self, "_prefix_cache", {})
 
     def epoch_of(self, t: float) -> int:
         if self.change_interval is None:
@@ -207,6 +208,28 @@ class BandwidthProcess:
         for j, e in enumerate(range(start_epoch, start_epoch + num_epochs)):
             out[j] = self._epoch_matrix(e)
         return out
+
+    def epochs_prefix(self, num_epochs: int) -> np.ndarray:
+        """Memoized read-only `(num_epochs, N, N)` prefix of the epoch
+        sequence (epochs `[0, num_epochs)`), bit-identical to
+        `sample_epochs(num_epochs)`.
+
+        This is the bulk substrate for device-resident epoch stacks
+        (`repro.core.engine.jax_stepper`): the stack is sampled once per
+        process instance and shared across every scheme/batch that
+        replays the same case, and a longer request *extends* the cached
+        prefix in place of resampling it (`sample_epochs` is
+        epoch-addressable, so the extension is the identical tail).
+        """
+        if num_epochs < 0:
+            raise ValueError("num_epochs must be >= 0")
+        have, stack = self._prefix_cache.get("prefix", (0, None))
+        if stack is None or have < num_epochs:
+            tail = self.sample_epochs(num_epochs - have, start_epoch=have)
+            stack = tail if stack is None else np.concatenate([stack, tail])
+            stack.setflags(write=False)
+            self._prefix_cache["prefix"] = (num_epochs, stack)
+        return stack[:num_epochs]
 
     _BLOCK_EPOCHS = 4
 

@@ -15,7 +15,11 @@ The compile/plan/execute split mirrors a small compiler stack:
 * `repro.core.engine.vectorized` — masked-array event steppers that
   advance a whole `(B, ...)` batch of scenarios at once, plus
   `run_scheme_vectorized`, the batched twin of `simulator.run_scheme`
-  that `repro.sim.sweep.run_sweep(executor="vectorized")` dispatches to.
+  that `repro.sim.sweep.run_sweep(executor="vectorized")` dispatches to;
+* `repro.core.engine.jax_stepper` — the same steppers as jit-compiled
+  JAX device programs (`lax.while_loop`/`scan` over static padded
+  shapes) behind `run_sweep(executor="jax")`; planning and replanning
+  stay on the host, execution runs on the accelerator.
 
 The object-based engine in `repro.core.simulator` stays the reference
 implementation; parity tests pin the vectorized path to it.
@@ -40,10 +44,12 @@ __all__ = [
     "execute_pipeline_batch",
     "execute_round_batch",
     "run_scheme_vectorized",
+    "jax_available",
 ]
 
 _VECTORIZED = ("execute_pipeline_batch", "execute_round_batch",
                "run_scheme_vectorized")
+_JAX = ("jax_available",)
 
 
 def __getattr__(name):
@@ -51,4 +57,8 @@ def __getattr__(name):
         from repro.core.engine import vectorized
 
         return getattr(vectorized, name)
+    if name in _JAX:
+        from repro.core.engine import jax_stepper
+
+        return getattr(jax_stepper, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -28,10 +28,12 @@ Two families live here, both pinned bit-identical to the object planners:
   candidate recomputation collapses to one sorted scan per priority
   class: a commit only mutates holdings at nodes that just became busy,
   so the remaining candidates' keys, order and usefulness are unchanged
-  (the random scheduler keeps its rng call sequence for the same reason —
-  filtering the snapshot equals recomputing it). `repro.core.msrepair`
-  is now a thin object facade over these. `plan_arrays_for_scheme`
-  lowers a schedule straight to `PlanArrays` for the vectorized engine.
+  (the random scheduler's within-round draw sequence survives the same
+  way — filtering the snapshot equals recomputing it; across rounds its
+  rng is counter-keyed on `(seed, round)`, see
+  `RANDOM_SCHEDULE_VERSION`). `repro.core.msrepair` is now a thin object
+  facade over these. `plan_arrays_for_scheme` lowers a schedule straight
+  to `PlanArrays` for the vectorized engine.
 """
 from __future__ import annotations
 
@@ -656,22 +658,38 @@ def msrepair_schedule_batch(jobs_list: list[list[Job]],
     return out
 
 
+# Version of the random-baseline schedule semantics. v1 drew every round
+# from ONE shared `default_rng(seed)` stream and enumerated candidates in
+# holdings-insertion order — draw r's value depended on every earlier
+# round, so rounds (and cases) could never be scheduled independently.
+# v2 keys each round's rng on the counter `(seed, round)` and enumerates
+# candidates in sorted `(job, src, dst)` order: rounds are pure functions
+# of `(seed, round, holdings)`, the exact property a lockstep batched
+# scheduler (like `msrepair_schedule_batch`) needs. Schedules differ from
+# v1 — `tests/test_planner_arrays.py` pins the v2 expectation explicitly.
+RANDOM_SCHEDULE_VERSION = 2
+
+
 def random_schedule(jobs: list[Job], *, seed: int = 0,
                     max_rounds: int = 256) -> Sched:
-    """Random-baseline scheduler, rng-compatible with the object walk.
+    """Random-baseline scheduler (v2 — see `RANDOM_SCHEDULE_VERSION`).
 
-    The candidate list is enumerated once per round (same nested order as
-    the object code) and filtered after each commit — a commit only
-    invalidates candidates touching the two newly-busy nodes, so the
-    filtered list matches a recompute element for element and the
-    `rng.integers(len(cands))` draw sequence is preserved exactly.
+    Each round draws from a counter-based rng keyed on `(seed, round)`
+    (the per-case seed comes in through `seed`), so a round's draws are
+    independent of every other round and case. The candidate list is
+    enumerated once per round in sorted `(job, src, dst)` order and
+    filtered after each commit — a commit only invalidates candidates
+    touching the two newly-busy nodes (and the job it may complete), so
+    the filtered list matches a recompute element for element and the
+    `rng.integers(len(cands))` draw sequence within the round is
+    well-defined.
     """
-    rng = np.random.default_rng(seed)
     state = _MaskState(jobs)
     rounds: Sched = []
-    for _ in range(max_rounds):
+    for r in range(max_rounds):
         if state.all_done():
             break
+        rng = np.random.default_rng(np.random.SeedSequence([seed, r]))
         busy: set[int] = set()
         rnd: list[tuple[int, int, int, int]] = []
         cands = []
@@ -681,12 +699,13 @@ def random_schedule(jobs: list[Job], *, seed: int = 0,
                 continue
             req = state.req[job_id]
             holders = state.hold[job_id]
-            dsts = (*holders, req)      # enumeration order is load-bearing
+            dsts = (*holders, req)
             cands.extend(
                 (job_id, src, dst)
                 for src in holders if src != req
                 for dst in dsts
                 if dst != src and (dst == req or dst in holders))
+        cands.sort()
         while cands:
             job_id, src, dst = cands[int(rng.integers(len(cands)))]
             mask = state.apply(job_id, src, dst)

@@ -26,15 +26,21 @@ the hot path), and the per-round BMF re-optimization — the paper's
 `optimize_round_batch`: one batched candidate-path enumeration over the
 live `(B, N, N)` bandwidth stack reroutes the bottleneck transfer of
 every case at once, splicing the relayed paths back into the compiled
-plans in place. The `(B, ...)` layout is the seam a future
-`jax.vmap`/Pallas stepper plugs into: both execution *and* replanning
-are now array math over static shapes.
+plans in place. The `(B, ...)` layout is the seam a device stepper
+plugs into: both execution *and* replanning are array math over static
+shapes, and `repro.core.engine.jax_stepper` exploits exactly that —
+`run_work_vectorized(backend="jax")` swaps the numpy event loops for
+jit-compiled `lax.while_loop`/`scan` programs while this module keeps
+owning the host-side orchestration (planning, the per-round BMF
+monitor-and-replan step, result bookkeeping). See `docs/engine.md` for
+the backend matrix and fallback rules.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time as _time
+import warnings
 
 import numpy as np
 
@@ -459,7 +465,8 @@ def _chunk_array(scenarios) -> np.ndarray:
     return np.array([sc.chunk_mb for sc in scenarios], dtype=float)
 
 
-def _run_ppt_batch(scenarios: list[Scenario]) -> list[SimResult]:
+def _run_ppt_batch(scenarios: list[Scenario],
+                   engine_factory=None) -> list[SimResult]:
     B = len(scenarios)
     num_nodes = max(sc.num_nodes for sc in scenarios)
     preps: list[_PipelinePrep] = []
@@ -485,14 +492,28 @@ def _run_ppt_batch(scenarios: list[Scenario]) -> list[SimResult]:
             depth_arr[b, e] = depths[c]
             edge_valid[b, e] = True
 
-    bb = _BatchBandwidth([sc.bw for sc in scenarios], num_nodes)
-    degrade, floor, duplex = _ingress_params(scenarios)
-    chunk = _chunk_array(scenarios)
     t0 = np.array([p.t_start for p in preps])
-    t_end = execute_pipeline_batch(
-        child, parent, depth_arr, edge_valid, t0, bb,
-        [sc.ingress for sc in scenarios], chunk, {}, degrade, floor, duplex,
-    )
+    t_end = None
+    if engine_factory is not None:
+        from repro.core.engine.jax_stepper import EpochHorizonError
+
+        engine = engine_factory(scenarios, num_nodes, parent, edge_valid)
+        while engine is not None:       # grow the epoch horizon on overrun
+            try:
+                t_end = engine.execute(child, parent, depth_arr, edge_valid,
+                                       t0)
+                break
+            except EpochHorizonError:
+                engine = engine.grow()  # None once capped -> numpy fallback
+    if t_end is None:
+        bb = _BatchBandwidth([sc.bw for sc in scenarios], num_nodes)
+        degrade, floor, duplex = _ingress_params(scenarios)
+        chunk = _chunk_array(scenarios)
+        t_end = execute_pipeline_batch(
+            child, parent, depth_arr, edge_valid, t0, bb,
+            [sc.ingress for sc in scenarios], chunk, {}, degrade, floor,
+            duplex,
+        )
     return [
         SimResult(
             scheme="ppt", total_time=float(t_end[b]),
@@ -513,17 +534,58 @@ def _run_rounds_batch(
     static_plan_time: bool,
     bmf_optimize_all: bool,
     keep_plans: bool,
+    engine_factory=None,
+) -> list[SimResult]:
+    """Retry wrapper around `_run_rounds_once`: a device engine whose
+    pre-sampled epoch horizon overflows gets its horizon grown and the
+    attempt re-runs from scratch — any BMF splices the aborted attempt
+    wrote into the compiled plans are rolled back first, so the retry
+    replans from the same pristine state (results are identical; only
+    the wasted attempt's wall-clock differs). `engine.grow()` returns
+    None once capped, which drops the batch to the numpy steppers."""
+    num_nodes = max(max(sc.num_nodes, pa.num_nodes)
+                    for sc, pa in zip(scenarios, arrays))
+    kw = dict(bmf_rows=bmf_rows, static_plan_time=static_plan_time,
+              bmf_optimize_all=bmf_optimize_all, keep_plans=keep_plans)
+    if engine_factory is None:
+        return _run_rounds_once(scenarios, schemes, arrays, plan_clocks,
+                                num_nodes, None, **kw)
+    from repro.core.engine.jax_stepper import EpochHorizonError
+
+    engine = engine_factory(scenarios, num_nodes, arrays)
+    # rollback copies are only reachable through an engine's horizon
+    # overflow — don't pay for them when the factory declined the batch
+    snap = ([(pa.t_path.copy(), pa.t_path_len.copy(), pa.num_nodes)
+             for pa in arrays]
+            if engine is not None and bmf_rows.any() else None)
+    while True:
+        try:
+            return _run_rounds_once(scenarios, schemes, arrays, plan_clocks,
+                                    num_nodes, engine, **kw)
+        except EpochHorizonError:
+            if snap is not None:
+                for pa, (tp, tl, nn) in zip(arrays, snap):
+                    pa.t_path = tp.copy()
+                    pa.t_path_len = tl.copy()
+                    pa.num_nodes = nn
+            engine = engine.grow()
+
+
+def _run_rounds_once(
+    scenarios: list[Scenario],
+    schemes: list[str],
+    arrays: list[PlanArrays],
+    plan_clocks: list[float],
+    num_nodes: int,
+    engine,                        # device round engine, or None for numpy
+    *,
+    bmf_rows: np.ndarray,
+    static_plan_time: bool,
+    bmf_optimize_all: bool,
+    keep_plans: bool,
 ) -> list[SimResult]:
     B = len(scenarios)
     rounds_of = [pa.num_rounds for pa in arrays]
-    num_nodes = max(max(sc.num_nodes, pa.num_nodes)
-                    for sc, pa in zip(scenarios, arrays))
-
-    bb = _BatchBandwidth([sc.bw for sc in scenarios], num_nodes)
-    degrade, floor, _ = _ingress_params(scenarios)
-    ingresses = [sc.ingress for sc in scenarios]
-    chunk = _chunk_array(scenarios)
-    wcache: dict = {}
 
     t = np.zeros(B)
     relay_hops = np.zeros(B, dtype=np.int64)
@@ -532,10 +594,26 @@ def _run_rounds_batch(
     hop_all_u, hop_all_v, n_hops_all = _gather_all_rounds(arrays)
     R = hop_all_u.shape[1]
     rt = np.zeros((R, B))
+    brows = np.nonzero(bmf_rows)[0]
+
+    if engine is not None and not brows.size:
+        # no per-round replanning: the whole plan runs as one device
+        # scan over the round axis instead of R host round-trips (and
+        # none of the numpy batch prep below is needed)
+        rt_all, t = engine.execute_rounds(hop_all_u, hop_all_v,
+                                          n_hops_all, t)
+        rt[:] = rt_all
+        return _round_results(scenarios, schemes, arrays, rounds_of, t, rt,
+                              plan_clock, relay_hops, logs, keep_plans)
+
+    bb = _BatchBandwidth([sc.bw for sc in scenarios], num_nodes)
+    degrade, floor, _ = _ingress_params(scenarios)
+    ingresses = [sc.ingress for sc in scenarios]
+    chunk = _chunk_array(scenarios)
+    wcache: dict = {}
 
     bb_plan = bb
     idle_base = None
-    brows = np.nonzero(bmf_rows)[0]
     if brows.size:
         # per-case idle pool: nodes outside every job's requestor/failed
         # set, limited to the case's own cluster (== simulator._idle_pool).
@@ -597,13 +675,22 @@ def _run_rounds_batch(
             for k, row, path in spliced:
                 pa = arrays[brows[k]]
                 splice_path(pa, int(pa.round_start[r]) + row, path)
-        t_end = execute_round_batch(
-            hop_u, hop_v, n_hops, t, bb, ingresses, chunk,
-            wcache, degrade, floor,
-        )
+        if engine is not None:
+            t_end = engine.execute_round(hop_u, hop_v, n_hops, t)
+        else:
+            t_end = execute_round_batch(
+                hop_u, hop_v, n_hops, t, bb, ingresses, chunk,
+                wcache, degrade, floor,
+            )
         rt[r] = t_end - t
         t = t_end
 
+    return _round_results(scenarios, schemes, arrays, rounds_of, t, rt,
+                          plan_clock, relay_hops, logs, keep_plans)
+
+
+def _round_results(scenarios, schemes, arrays, rounds_of, t, rt, plan_clock,
+                   relay_hops, logs, keep_plans) -> list[SimResult]:
     return [
         SimResult(
             scheme=schemes[b], total_time=float(t[b]),
@@ -612,7 +699,7 @@ def _run_rounds_batch(
             plan=decompile(arrays[b]) if keep_plans else None,
             relay_hops=int(relay_hops[b]), log=logs[b],
         )
-        for b in range(B)
+        for b in range(len(scenarios))
     ]
 
 
@@ -624,6 +711,7 @@ def run_work_vectorized(
     *,
     bmf_optimize_all: bool = False,
     keep_plans: bool = True,
+    backend: str = "numpy",
 ) -> list[SimResult]:
     """Run `(scenario, scheme, seed)` work rows through the batched engine.
 
@@ -642,7 +730,30 @@ def run_work_vectorized(
     (modulo wall-clock `planning_time`). `keep_plans=False` skips
     decompiling executed plans back to objects — the sweep default,
     since it strips plans anyway.
+
+    `backend` picks the *execution* stepper: "numpy" (this module's
+    masked-array loops) or "jax" (`repro.core.engine.jax_stepper`'s
+    jit-compiled device programs — planning and the BMF replan host loop
+    are unchanged). Batches the jax engine cannot take (jax missing,
+    non-persistent ingress shares, epoch stacks past the memory cap)
+    fall back to the numpy steppers; results are backend-independent
+    either way.
     """
+    round_factory = ppt_factory = None
+    if backend == "jax":
+        from repro.core.engine import jax_stepper
+
+        if jax_stepper.jax_available():
+            round_factory = jax_stepper.make_round_engine
+            ppt_factory = jax_stepper.make_pipeline_engine
+        else:
+            warnings.warn(
+                "backend='jax': jax is not importable; running the batch "
+                "on the numpy vectorized engine instead",
+                RuntimeWarning, stacklevel=2)
+    elif backend != "numpy":
+        raise ValueError(f"unknown backend {backend!r}")
+
     results: list[SimResult | None] = [None] * len(work)
 
     ppt_groups: dict[int, list[int]] = {}
@@ -650,7 +761,8 @@ def run_work_vectorized(
         if scheme == "ppt":
             ppt_groups.setdefault(sc.num_nodes, []).append(i)
     for idxs in ppt_groups.values():
-        for i, r in zip(idxs, _run_ppt_batch([work[i][0] for i in idxs])):
+        for i, r in zip(idxs, _run_ppt_batch([work[i][0] for i in idxs],
+                                             engine_factory=ppt_factory)):
             results[i] = r
 
     rows = [i for i, (_, scheme, _) in enumerate(work) if scheme != "ppt"]
@@ -703,6 +815,7 @@ def run_work_vectorized(
             static_plan_time=static,
             bmf_optimize_all=bmf_optimize_all,
             keep_plans=keep_plans,
+            engine_factory=round_factory,
         )
         for i, r in zip(idxs, sims):
             results[i] = r
@@ -721,6 +834,7 @@ def run_scheme_vectorized(
     seeds: list[int] | None = None,
     bmf_optimize_all: bool = False,
     keep_plans: bool = True,
+    backend: str = "numpy",
 ) -> list[SimResult]:
     """Batched `run_scheme` for one scheme: see `run_work_vectorized`."""
     seeds = list(seeds) if seeds is not None else [0] * len(scenarios)
@@ -729,4 +843,5 @@ def run_scheme_vectorized(
     return run_work_vectorized(
         [(sc, scheme, seed) for sc, seed in zip(scenarios, seeds)],
         bmf_optimize_all=bmf_optimize_all, keep_plans=keep_plans,
+        backend=backend,
     )

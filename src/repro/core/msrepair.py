@@ -106,7 +106,9 @@ def plan_mppr(jobs: list[Job]) -> RepairPlan:
 # -------------------------------------------------------------------- random
 def plan_random(jobs: list[Job], *, seed: int = 0, max_rounds: int = 256) -> RepairPlan:
     """Random scheduling baseline: each round greedily packs uniformly-random
-    useful transfers (ignoring the priority classes)."""
+    useful transfers (ignoring the priority classes). Round draws come
+    from a counter-based rng keyed on `(seed, round)` — see
+    `repro.core.engine.planner_arrays.RANDOM_SCHEDULE_VERSION`."""
     rounds = _to_rounds(
         _pa.random_schedule(jobs, seed=seed, max_rounds=max_rounds))
     return RepairPlan(jobs=jobs, rounds=rounds, meta={"scheme": "random"})

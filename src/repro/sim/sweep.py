@@ -239,7 +239,10 @@ def run_sweep(
     `schemes` overrides both the suite default and per-case scheme sets;
     otherwise each case runs `case.schemes or suite.schemes`. Executors:
     "serial", "thread", "process", "vectorized" (batched array engine —
-    compatible cases step through `repro.core.engine` together) or "auto"
+    compatible cases step through `repro.core.engine` together), "jax"
+    (the vectorized engine with jit-compiled device steppers from
+    `repro.core.engine.jax_stepper`; falls back to the numpy steppers
+    per batch when jax is missing or a batch is unsupported) or "auto"
     (process pool on a multi-core host once the sweep is large enough to
     amortize worker spawn — at least `2 * _MIN_CASES_PER_WORKER` cases;
     an explicit "process" below that threshold warns and runs serial).
@@ -266,8 +269,10 @@ def run_sweep(
         for case, case_schemes in work:
             yield case, case_schemes, keep_plans, bmf_optimize_all
 
-    if mode == "vectorized":
-        results = _run_vectorized(work, keep_plans, bmf_optimize_all)
+    if mode in ("vectorized", "jax"):
+        results = _run_vectorized(
+            work, keep_plans, bmf_optimize_all,
+            backend="jax" if mode == "jax" else "numpy")
     elif mode == "serial":
         results = [_run_case(*args) for args in jobs()]
     elif mode == "thread":
@@ -301,6 +306,7 @@ def _run_vectorized(
     work: list[tuple[ScenarioCase, tuple[str, ...]]],
     keep_plans: bool,
     bmf_optimize_all: bool,
+    backend: str = "numpy",
 ) -> list[CaseResult]:
     """Dispatch work through the batched array engine, scheme by scheme.
 
@@ -309,8 +315,11 @@ def _run_vectorized(
     planning — each case owns its plan, no dedup/copy workarounds),
     groups them into structurally compatible batches (same cluster size
     and round count) and falls back to the object engine per case when a
-    plan cannot be lowered to arrays. Results are identical to the serial
-    executor (the engine parity tests pin this), only wall-clock changes.
+    plan cannot be lowered to arrays. `backend="jax"` swaps the batch
+    steppers for the jit-compiled device programs in
+    `repro.core.engine.jax_stepper` (unsupported batches drop back to
+    numpy). Results are identical to the serial executor (the engine
+    parity tests pin this), only wall-clock changes.
     """
     from repro.core.engine.vectorized import run_work_vectorized
 
@@ -323,7 +332,7 @@ def _run_vectorized(
 
     by_pos: list[dict[str, SimResult]] = [{} for _ in work]
     sims = run_work_vectorized(rows, bmf_optimize_all=bmf_optimize_all,
-                               keep_plans=keep_plans)
+                               keep_plans=keep_plans, backend=backend)
     for (pos, scheme), r in zip(flat, sims):
         by_pos[pos][scheme] = r if keep_plans else _strip(r)
     return [
