@@ -13,8 +13,8 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_ablation, bench_aliyun, bench_fig8,
-                            bench_fig9, bench_fig10, bench_fig11,
+    from benchmarks import (bench_ablation, bench_aliyun, bench_dataplane,
+                            bench_fig8, bench_fig9, bench_fig10, bench_fig11,
                             bench_kernels, bench_sweep, bench_table2)
     modules = [
         ("table2", bench_table2),
@@ -26,6 +26,7 @@ def main() -> None:
         ("kernels", bench_kernels),
         ("ablation", bench_ablation),
         ("sweep", bench_sweep),
+        ("dataplane", bench_dataplane),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -19,7 +19,12 @@ The compile/plan/execute split mirrors a small compiler stack:
 * `repro.core.engine.jax_stepper` — the same steppers as jit-compiled
   JAX device programs (`lax.while_loop`/`scan` over static padded
   shapes) behind `run_sweep(executor="jax")`; planning and replanning
-  stay on the host, execution runs on the accelerator.
+  stay on the host, execution runs on the accelerator;
+* `repro.core.engine.dataplane` — the byte data plane: batches of
+  compiled plans executed over *real bytes* (`(B, slots, nbytes)`
+  buffer tensors, batched GF(256) premultiply + segment-XOR through
+  `repro.kernels.ops`), byte-identical to the serial oracle in
+  `repro.core.executor`.
 
 The object-based engine in `repro.core.simulator` stays the reference
 implementation; parity tests pin the vectorized path to it.
@@ -30,7 +35,8 @@ would cycle.
 """
 from repro.core.engine.arrays import (PlanArrays, UnsupportedPlanError,
                                       compile_plan, decompile,
-                                      plan_arrays_from_schedule, splice_path,
+                                      plan_arrays_from_schedule,
+                                      relabel_plan_nodes, splice_path,
                                       validate_plan_arrays)
 
 __all__ = [
@@ -45,11 +51,19 @@ __all__ = [
     "execute_round_batch",
     "run_scheme_vectorized",
     "jax_available",
+    "BatchExecutionResult",
+    "execute_plans_batch",
+    "identity_block_map",
+    "relabel_plan_nodes",
 ]
 
 _VECTORIZED = ("execute_pipeline_batch", "execute_round_batch",
                "run_scheme_vectorized")
 _JAX = ("jax_available",)
+# the byte data plane imports jax via repro.kernels — lazy like the
+# jax stepper, so numpy-only sweep workers stay cheap to spawn
+_DATAPLANE = ("BatchExecutionResult", "execute_plans_batch",
+              "identity_block_map")
 
 
 def __getattr__(name):
@@ -61,4 +75,8 @@ def __getattr__(name):
         from repro.core.engine import jax_stepper
 
         return getattr(jax_stepper, name)
+    if name in _DATAPLANE:
+        from repro.core.engine import dataplane
+
+        return getattr(dataplane, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -292,6 +292,68 @@ def splice_path(pa: PlanArrays, row: int, path: tuple[int, ...]) -> None:
         pa.num_nodes = max(path) + 1
 
 
+def relabel_plan_nodes(pa: PlanArrays, perm: np.ndarray) -> PlanArrays:
+    """A copy of `pa` with every node id mapped through `perm`.
+
+    `perm[old] = new` must be defined for every id the plan references
+    and injective over them; term/helper images must stay < 64 (the
+    bitmask limit). This is how the byte-verification layer replays one
+    logical plan against a *placed* stripe (`repro.ec.stripe`): the
+    planner's block-position node ids are relabeled to the failure
+    domains the stripe actually occupies, and the relabeled plan is as
+    valid as the original (renaming preserves every role/fold invariant).
+    """
+    perm = np.asarray(perm, dtype=np.int64)
+    used = np.concatenate([
+        pa.job_failed, pa.job_requestor,
+        pa.job_helpers[pa.job_helpers >= 0],
+        pa.t_path[pa.t_path >= 0],
+    ])
+    if used.size and (used.max() >= perm.size or (perm[used] < 0).any()):
+        raise ValueError("perm does not cover every node id in the plan")
+    imgs = perm[np.unique(used)] if used.size else np.array([], dtype=np.int64)
+    if np.unique(imgs).size != imgs.size:
+        raise ValueError("perm is not injective over the plan's node ids")
+
+    def _map(a: np.ndarray) -> np.ndarray:
+        out = np.where(a >= 0, perm[np.maximum(a, 0)], a)
+        return out.astype(a.dtype)
+
+    def _map_masks(masks: np.ndarray) -> np.ndarray:
+        out = np.zeros_like(masks)
+        for i, m in enumerate(int(x) for x in masks):
+            new = 0
+            while m:
+                b = m & -m
+                t = perm[b.bit_length() - 1]
+                if not 0 <= t < _MAX_MASK_NODES:
+                    raise UnsupportedPlanError(
+                        f"relabeled term id {t} does not fit a uint64 bitmask")
+                new |= 1 << int(t)
+                m ^= b
+            out[i] = new
+        return out
+
+    return PlanArrays(
+        job_id=pa.job_id.copy(),
+        job_failed=_map(pa.job_failed),
+        job_requestor=_map(pa.job_requestor),
+        job_helpers=_map(pa.job_helpers),
+        job_helpers_len=pa.job_helpers_len.copy(),
+        job_terms=_map_masks(pa.job_terms),
+        t_src=_map(pa.t_src),
+        t_dst=_map(pa.t_dst),
+        t_job=pa.t_job.copy(),
+        t_job_idx=pa.t_job_idx.copy(),
+        t_terms=_map_masks(pa.t_terms),
+        t_path=_map(pa.t_path),
+        t_path_len=pa.t_path_len.copy(),
+        round_start=pa.round_start.copy(),
+        num_nodes=int(perm[used].max()) + 1 if used.size else pa.num_nodes,
+        meta=dict(pa.meta),
+    )
+
+
 def decompile(pa: PlanArrays) -> RepairPlan:
     """Reconstruct the exact `RepairPlan` that `compile_plan` lowered."""
     jobs = [

@@ -16,7 +16,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.plan import Job
+from repro.core.plan import Job, RepairPlan, Round, Transfer
 
 
 @dataclasses.dataclass
@@ -46,6 +46,37 @@ class PPTTree:
             fan_in = max(1, len(self.children.get(p, ())))
             bn = min(bn, bw[c, p] / fan_in)
         return bn
+
+
+def ppt_round_plan(tree: PPTTree) -> RepairPlan:
+    """Store-and-forward lowering of a pipeline tree to a `RepairPlan`.
+
+    PPT executes as slice pipelining (no round structure), but the *bytes*
+    it moves are well-defined: every tree node forwards the XOR-fold of
+    its subtree's premultiplied terms to its parent. Lowering depth level
+    d to round `dmax - d` (deepest first) yields an equivalent
+    store-and-forward plan — by the time a node sends, all of its
+    children's fragments have arrived and folded — so the byte data plane
+    can execute and verify PPT repairs with the same machinery as the
+    round schemes. Fan-in at interior nodes is real: validate with
+    `max_recv_per_round` >= the tree's widest fan-in.
+    """
+    job = tree.job
+    depths = tree.depths()
+    dmax = max(depths.values(), default=0)
+    terms: dict[int, set[int]] = {h: {h} for h in job.helpers}
+    rounds = []
+    for d in range(dmax, 0, -1):
+        rnd = Round()
+        for c in sorted(n for n, dd in depths.items() if dd == d):
+            p = tree.parent[c]
+            rnd.transfers.append(Transfer(
+                src=c, dst=p, job=job.job_id, terms=frozenset(terms[c])))
+            terms.setdefault(p, set()).update(terms[c])
+            del terms[c]
+        rounds.append(rnd)
+    return RepairPlan(jobs=[job], rounds=rounds,
+                      meta={"scheme": "ppt", "lowered_from": "pipeline-tree"})
 
 
 def build_ppt_tree(job: Job, bw0: np.ndarray) -> PPTTree:

@@ -96,6 +96,37 @@ class RSCode:
             out[fi] = acc
         return out
 
+    def repair_coeffs_batch(
+        self, failed: np.ndarray, helpers: np.ndarray
+    ) -> np.ndarray:
+        """Batched single-failure repair coefficients.
+
+        `failed` is (J,) lost block ids, `helpers` (J, k) helper block ids
+        (each row exactly k distinct survivors of its own failure). Returns
+        (J, k) uint8 coefficients, row j aligned with `helpers[j]` —
+        identical to `repair_coeffs((failed[j],), helpers[j])[0]` but the
+        whole batch shares one lockstep Gauss-Jordan
+        (`gf256.gf_mat_inv_batch`) instead of J scalar inversions. This is
+        the data-plane engine's entry point: one call covers every job of
+        a batch of compiled plans.
+        """
+        failed = np.asarray(failed, dtype=np.int64).reshape(-1)
+        helpers = np.asarray(helpers, dtype=np.int64)
+        if failed.size == 0:
+            return np.zeros((0, self.k), dtype=np.uint8)
+        if helpers.shape != (failed.size, self.k):
+            raise ValueError(
+                f"helpers must be ({failed.size}, k={self.k}), "
+                f"got {helpers.shape}")
+        if (helpers == failed[:, None]).any():
+            raise ValueError("helpers overlap failed nodes")
+        gen = self.generator
+        sub_inv = gf256.gf_mat_inv_batch(gen[helpers])      # (J, k, k)
+        # out[j] = XOR_i gen[failed[j], i] (*) sub_inv[j, i, :]
+        lost = gen[failed]                                  # (J, k)
+        return np.bitwise_xor.reduce(
+            gf256.MUL_TABLE[lost[:, :, None], sub_inv], axis=1)
+
     def reconstruct(
         self,
         failed: list[int],

@@ -36,6 +36,33 @@ class Stripe:
         except ValueError:
             return None
 
+    def block_map(self, num_domains: int) -> np.ndarray:
+        """(num_domains,) node -> block position under this placement
+        (-1 for domains holding no block of this stripe) — the `block_of`
+        argument the byte data plane executes against."""
+        if num_domains < self.code.n:
+            raise ValueError(
+                f"stripe spans {self.code.n} domains, have {num_domains}")
+        out = np.full(num_domains, -1, dtype=np.int64)
+        out[list(self.node_ids)] = np.arange(self.code.n)
+        return out
+
+    def perm(self, num_domains: int) -> np.ndarray:
+        """(num_domains,) permutation from planner node ids (block b on
+        node b, relays after) to this stripe's failure domains: block
+        holders map onto `node_ids`, the relay pool onto the remaining
+        domains in sorted order. Feed it to
+        `repro.core.engine.arrays.relabel_plan_nodes` to replay a
+        logical plan against the placed stripe."""
+        n = self.code.n
+        if num_domains < n:
+            raise ValueError(
+                f"stripe spans {n} domains, have {num_domains}")
+        out = np.full(num_domains, -1, dtype=np.int64)
+        out[:n] = self.node_ids
+        out[n:] = sorted(set(range(num_domains)) - set(self.node_ids))
+        return out
+
 
 def place_stripes(
     num_stripes: int, code: RSCode, num_domains: int, *, rotate: bool = True

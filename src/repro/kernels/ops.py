@@ -14,13 +14,22 @@ import numpy as np
 
 from repro.ec import bitplane
 from repro.kernels import ref
-from repro.kernels.gf256_matmul import gf256_matmul_planes
-from repro.kernels.xor_reduce import xor_reduce_words
+from repro.kernels.gf256_matmul import gf256_matmul_planes, gf256_scale_planes
+from repro.kernels.xor_reduce import xor_reduce_groups_words, xor_reduce_words
 
 
 @functools.lru_cache(maxsize=1)
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _use_kernel_default() -> bool:
+    """Batched entry points compile the kernels on TPU and fall back to
+    the numpy oracles in `repro.kernels.ref` everywhere else — unlike the
+    per-chunk wrappers above, whose interpret mode exists to *exercise*
+    the kernel bodies, the batched paths are sized for throughput and the
+    Pallas interpreter is not a performance proxy."""
+    return not _interpret_default()
 
 
 def gf256_matmul(
@@ -68,6 +77,79 @@ def xor_reduce(
     out = xor_reduce_words(words, interpret=interpret)
     out_bytes = jax.lax.bitcast_convert_type(out[:, None], jnp.uint8).reshape(-1)
     return out_bytes[:nbytes]
+
+
+def gf256_scale_batch(
+    coeffs: np.ndarray,
+    data,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+):
+    """(M,) uint8 coeffs x (M, nbytes) uint8 -> (M, nbytes): row i scaled
+    by its own coefficient.
+
+    The batched data-plane premultiply: one call covers every
+    (job, helper) chunk of a plan batch. `use_kernel=None` (the default)
+    compiles the Pallas kernel on TPU and takes the numpy oracle
+    (`ref.gf256_scale_batch_np`) elsewhere; the kernel path drives
+    `gf256_scale_planes` over an (M, W/block) grid — the same kernel body
+    as `gf256_matmul`, one grid row per chunk instead of one
+    `pallas_call` per chunk. Returns numpy on the ref path, a device
+    array on the kernel path.
+    """
+    coeffs = np.asarray(coeffs, dtype=np.uint8).reshape(-1)
+    if use_kernel is None:
+        use_kernel = _use_kernel_default()
+    if coeffs.size == 0 or not use_kernel:
+        return ref.gf256_scale_batch_np(coeffs, np.asarray(data))
+    interpret = _interpret_default() if interpret is None else interpret
+    nbytes = data.shape[-1]
+    masks = jnp.asarray(bitplane.coeff_to_masks_np(coeffs[:, None]))
+    planes = bitplane.pack_jnp(jnp.asarray(data))
+    out_planes = gf256_scale_planes(masks, planes, interpret=interpret)
+    return bitplane.unpack_jnp(out_planes, nbytes)
+
+
+def xor_reduce_segments(
+    chunks,
+    groups: np.ndarray,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+):
+    """(T, nbytes) uint8 chunks + (G, Kmax) int row-index groups (-1
+    padded) -> (G, nbytes): XOR-fold of each group's member rows.
+
+    The batched data-plane merge: group g holds the payload rows arriving
+    at one (case, destination) in a round. `use_kernel=None` compiles on
+    TPU and takes `ref.xor_reduce_segments_np` elsewhere; the kernel path
+    gathers groups to a dense (G, Kmax, W) word tensor (index -1 reads an
+    all-zero row — XOR identity) and drives the `xor_reduce` kernel body
+    over a (G, W/block) grid. Returns numpy on the ref path, a device
+    array on the kernel path.
+    """
+    groups = np.asarray(groups, dtype=np.int64)
+    if use_kernel is None:
+        use_kernel = _use_kernel_default()
+    if groups.shape[0] == 0 or not use_kernel:
+        return ref.xor_reduce_segments_np(np.asarray(chunks), groups)
+    interpret = _interpret_default() if interpret is None else interpret
+    chunks = jnp.asarray(chunks)
+    t, nbytes = chunks.shape
+    pad = -nbytes % 4
+    if pad:
+        chunks = jnp.pad(chunks, ((0, 0), (0, pad)))
+    words = jax.lax.bitcast_convert_type(
+        chunks.reshape(t, -1, 4), jnp.uint32
+    ).reshape(t, -1)
+    words = jnp.concatenate(
+        [words, jnp.zeros((1, words.shape[1]), dtype=jnp.uint32)])
+    gathered = words[jnp.where(groups >= 0, groups, t)]   # (G, Kmax, W)
+    out = xor_reduce_groups_words(gathered, interpret=interpret)
+    out_bytes = jax.lax.bitcast_convert_type(
+        out, jnp.uint8).reshape(groups.shape[0], -1)
+    return out_bytes[:, :nbytes]
 
 
 def rs_encode(parity_coeff: np.ndarray, data_blocks: jax.Array) -> jax.Array:

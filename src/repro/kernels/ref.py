@@ -63,6 +63,31 @@ def xor_reduce_ref(words: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
+def gf256_scale_batch_np(coeffs: np.ndarray, data: np.ndarray) -> np.ndarray:
+    """(M,) uint8 coeffs x (M, nbytes) uint8 -> (M, nbytes): per-row scale.
+
+    Numpy oracle for the batched premultiply (`kernels.ops.gf256_scale_batch`):
+    one dense MUL_TABLE gather covers the whole batch. This is the
+    non-interpret ref path the batched data plane runs off-TPU.
+    """
+    coeffs = np.asarray(coeffs, dtype=np.uint8).reshape(-1)
+    data = np.asarray(data, dtype=np.uint8)
+    assert data.shape[0] == coeffs.shape[0], (coeffs.shape, data.shape)
+    return gf256.MUL_TABLE[coeffs[:, None], data]
+
+
+def xor_reduce_segments_np(chunks: np.ndarray, groups: np.ndarray) -> np.ndarray:
+    """(T, nbytes) chunks + (G, Kmax) row-index groups (-1 padded) ->
+    (G, nbytes): XOR of each group's member rows (numpy oracle)."""
+    chunks = np.asarray(chunks, dtype=np.uint8)
+    groups = np.asarray(groups, dtype=np.int64)
+    if groups.size == 0:
+        return np.zeros((groups.shape[0], chunks.shape[-1]), dtype=np.uint8)
+    rows = chunks[np.maximum(groups, 0)]          # (G, K, nbytes) copy
+    rows[groups < 0] = 0
+    return np.bitwise_xor.reduce(rows, axis=1)
+
+
 def gf256_matmul_np(coeff: np.ndarray, data: np.ndarray) -> np.ndarray:
     """Numpy ground truth (table-based; see gf256.gf_matmul_np)."""
     return gf256.gf_matmul_np(coeff, data)

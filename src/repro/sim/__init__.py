@@ -29,6 +29,7 @@ from repro.sim.suite import (  # noqa: F401
     sample_failures,
 )
 from repro.sim.sweep import (  # noqa: F401
+    ByteVerification,
     CaseResult,
     SchemeStats,
     SweepResult,

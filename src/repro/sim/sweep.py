@@ -68,6 +68,23 @@ class SchemeStats:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class ByteVerification:
+    """Outcome of `run_sweep(verify_bytes=...)`: a sampled subset of the
+    sweep's cases re-planned and executed over *real bytes* (the batched
+    data plane, `repro.core.engine.dataplane`) against stripes placed by
+    `repro.ec.stripe` — every job's reconstructed block must equal the
+    lost block bit-for-bit."""
+
+    checked: tuple[tuple[int, str], ...]   # (case index, scheme) pairs
+    failures: tuple[tuple[int, str], ...]
+    nbytes: int                            # chunk size executed
+
+    @property
+    def verified(self) -> bool:
+        return not self.failures
+
+
 @dataclasses.dataclass
 class SweepResult:
     """Structured output of `run_sweep`, with aggregation helpers."""
@@ -75,6 +92,7 @@ class SweepResult:
     suite: str
     schemes: tuple[str, ...]
     cases: list[CaseResult]
+    byte_verification: ByteVerification | None = None
 
     def __len__(self) -> int:
         return len(self.cases)
@@ -185,19 +203,6 @@ def _run_case(
     )
 
 
-def _spawn_safe() -> bool:
-    """Spawn workers re-import __main__; interactive/stdin sessions can't."""
-    import sys
-
-    main = sys.modules.get("__main__")
-    if main is None:
-        return False
-    if getattr(main, "__spec__", None) is not None:
-        return True
-    path = getattr(main, "__file__", None)
-    return bool(path) and os.path.exists(path)
-
-
 # Spawn amortization: a spawned worker must be fed at least this many
 # cases to pay for its interpreter start-up + imports (~0.5 s each on this
 # stack); below it a process pool is strictly slower than the serial loop
@@ -213,15 +218,44 @@ def _process_workers(num_items: int, max_workers: int | None) -> int:
     return min(cap, num_items // _MIN_CASES_PER_WORKER)
 
 
-def _resolve_executor(executor: str, num_items: int,
+# "auto" picks the jax executor only when it can amortize jit compile and
+# per-round dispatch: a device backend (on CPU the tuned numpy engine is
+# strictly faster — BENCH_sweep.json: jax lands *under* serial on sub-
+# 100ms live suites), a trace-frozen suite (device epoch stacks are exact
+# replays, no horizon-growth retries) and enough cases to fill batches.
+_JAX_AUTO_MIN_CASES = 48
+
+
+def _jax_pays_off(cases) -> bool:
+    from repro.core.bandwidth import BandwidthTrace
+
+    if len(cases) < _JAX_AUTO_MIN_CASES:
+        return False
+    if not all(type(c.scenario.bw) is BandwidthTrace for c in cases):
+        return False
+    try:
+        from repro.core.engine import jax_available
+
+        if not jax_available():
+            return False
+        import jax
+
+        return jax.default_backend() != "cpu"
+    except Exception:  # pragma: no cover - broken jax install
+        return False
+
+
+def _resolve_executor(executor: str, cases,
                       max_workers: int | None = None) -> str:
+    """"auto" = the batched array engine: vectorized on CPU, jax when a
+    device backend can amortize compilation (large trace-frozen suites).
+    Both match the serial executor case for case, so auto never changes
+    results — only wall-clock. The process pool stays opt-in: it only
+    beats the vectorized engine for very long individual cases, which a
+    heuristic cannot see."""
     if executor != "auto":
         return executor
-    cpus = os.cpu_count() or 1
-    if (cpus > 1 and _process_workers(num_items, max_workers) > 1
-            and _spawn_safe()):
-        return "process"
-    return "serial"
+    return "jax" if _jax_pays_off(cases) else "vectorized"
 
 
 def run_sweep(
@@ -233,20 +267,30 @@ def run_sweep(
     keep_plans: bool = False,
     bmf_optimize_all: bool = False,
     mp_context: str = "spawn",
+    verify_bytes: int | None = None,
 ) -> SweepResult:
     """Run every case of `suite` under every applicable scheme.
 
     `schemes` overrides both the suite default and per-case scheme sets;
     otherwise each case runs `case.schemes or suite.schemes`. Executors:
-    "serial", "thread", "process", "vectorized" (batched array engine —
-    compatible cases step through `repro.core.engine` together), "jax"
-    (the vectorized engine with jit-compiled device steppers from
-    `repro.core.engine.jax_stepper`; falls back to the numpy steppers
-    per batch when jax is missing or a batch is unsupported) or "auto"
-    (process pool on a multi-core host once the sweep is large enough to
-    amortize worker spawn — at least `2 * _MIN_CASES_PER_WORKER` cases;
-    an explicit "process" below that threshold warns and runs serial).
+    "serial", "thread", "process" (object engine on a spawn pool; below
+    the spawn-amortization threshold it warns and runs serial),
+    "vectorized" (batched array engine — compatible cases step through
+    `repro.core.engine` together), "jax" (the vectorized engine with
+    jit-compiled device steppers from `repro.core.engine.jax_stepper`;
+    falls back to the numpy steppers per batch when jax is missing or a
+    batch is unsupported) or "auto" (the batched array engine: jax when
+    a device backend can amortize compilation — large trace-frozen
+    suites on an accelerator — else vectorized, the fastest CPU path).
     Output is independent of the executor choice.
+
+    `verify_bytes=k` additionally byte-verifies `k` sampled cases: their
+    plans are re-derived and executed over real bytes by the batched
+    data plane against stripes placed by `repro.ec.stripe` (every
+    scheme, PPT included via its store-and-forward lowering); the
+    outcome lands in `SweepResult.byte_verification`. This turns a
+    timing sweep into an end-to-end correctness probe of the whole
+    planner + placement + GF(256) stack at a marginal cost.
     """
     cases = list(suite.cases())
     work = [
@@ -254,7 +298,7 @@ def run_sweep(
          else (case.schemes or tuple(suite.schemes)))
         for case in cases
     ]
-    mode = _resolve_executor(executor, len(work), max_workers)
+    mode = _resolve_executor(executor, cases, max_workers)
     if mode == "process":
         workers = _process_workers(len(work), max_workers)
         if workers < 2:
@@ -295,11 +339,83 @@ def run_sweep(
         for s in case_schemes:
             if s not in all_schemes:
                 all_schemes.append(s)
-    return SweepResult(suite=suite.name, schemes=tuple(all_schemes), cases=results)
+    verification = None
+    if verify_bytes:
+        verification = _byte_verify(work, verify_bytes,
+                                    bmf_optimize_all=bmf_optimize_all)
+    return SweepResult(suite=suite.name, schemes=tuple(all_schemes),
+                       cases=results, byte_verification=verification)
 
 
 def _run_case_star(args) -> CaseResult:
     return _run_case(*args)
+
+
+# ------------------------------------------------------------ byte verify
+_VERIFY_NBYTES = 512
+
+
+def _verify_plan(scenario, scheme: str, seed: int, bmf_optimize_all: bool):
+    """The executed plan a (scenario, scheme) pair would produce — plans
+    are pure functions of (scenario, scheme, seed), so re-deriving them
+    here reproduces exactly what the sweep timed (including per-round BMF
+    relay splices). PPT plans a pipeline tree, not rounds; its bytes are
+    executed through the store-and-forward lowering `ppt_round_plan`."""
+    from repro.core.ppt import build_ppt_tree, ppt_round_plan
+    from repro.core.simulator import run_scheme
+
+    if scheme == "ppt":
+        tree = build_ppt_tree(scenario.make_jobs()[0],
+                              scenario.bw.matrix_at(0.0))
+        return ppt_round_plan(tree)
+    return run_scheme(scenario, scheme, bmf_optimize_all=bmf_optimize_all,
+                      random_seed=seed).plan
+
+
+def _byte_verify(work, num_cases: int, *,
+                 bmf_optimize_all: bool) -> ByteVerification:
+    """Byte-verify a deterministic sample of the sweep's cases.
+
+    Every sampled (case, scheme) pair gets its own stripe from
+    `place_stripes` (RAID-5-style rotated placement over the case's
+    failure domains), random payload bytes split by `split_blob`, and its
+    plan relabeled through the placement — then the whole sample executes
+    as ONE batched data-plane call. A failure here means some layer
+    (planner, relabeling, placement, GF(256) math) corrupted bytes.
+    """
+    from repro.core.engine.arrays import compile_plan, relabel_plan_nodes
+    from repro.core.engine.dataplane import execute_plans_batch
+    from repro.ec.stripe import place_stripes, split_blob
+
+    rng = np.random.default_rng(0x5712BE)
+    picks = sorted(rng.choice(len(work), size=min(num_cases, len(work)),
+                              replace=False).tolist())
+    checked: list[tuple[int, str]] = []
+    plans, codes, cws, bmaps = [], [], [], []
+    for p in picks:
+        case, case_schemes = work[p]
+        sc = case.scenario
+        code, cluster = sc.code, sc.num_nodes
+        stripes = place_stripes(len(case_schemes), code, cluster)
+        blob_rng = np.random.default_rng(case.seed)
+        blob = blob_rng.integers(
+            0, 256, size=len(case_schemes) * code.k * _VERIFY_NBYTES,
+            dtype=np.uint8)
+        datas = split_blob(blob, code.k, _VERIFY_NBYTES)
+        for si, scheme in enumerate(case_schemes):
+            plan = _verify_plan(sc, scheme, case.seed, bmf_optimize_all)
+            stripe = stripes[si]
+            pa = relabel_plan_nodes(compile_plan(plan), stripe.perm(cluster))
+            checked.append((case.index, scheme))
+            plans.append(pa)
+            codes.append(code)
+            cws.append(code.encode(datas[si]))
+            bmaps.append(stripe.block_map(cluster))
+    res = execute_plans_batch(plans, codes, cws, block_of=bmaps)
+    failures = tuple(pair for pair, ok in zip(checked, res.verified)
+                     if not ok)
+    return ByteVerification(checked=tuple(checked), failures=failures,
+                            nbytes=_VERIFY_NBYTES)
 
 
 def _run_vectorized(

@@ -50,6 +50,102 @@ def test_parity_failure_repairs(rng):
     assert ex.verified
 
 
+def test_consumed_source_raises_clear_error(rng):
+    """Store-and-forward consumes a source's buffer when it sends: a plan
+    whose later round re-sources it is unexecutable and must fail loudly
+    (the store.pop audit), not KeyError or silently move zeros."""
+    from repro.core.plan import Job, RepairPlan, Round, Transfer
+
+    code = RSCode(4, 2)
+    cw = code.encode(rng.integers(0, 256, size=(2, 64), dtype=np.uint8))
+    jobs = [Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2))]
+    bad = RepairPlan(jobs=jobs, rounds=[
+        Round(transfers=[Transfer(src=1, dst=0, job=0,
+                                  terms=frozenset({1}))]),
+        Round(transfers=[Transfer(src=1, dst=0, job=0,
+                                  terms=frozenset({1}))]),
+    ])
+    with pytest.raises(ValueError, match="holds no buffer"):
+        executor.execute_plan(bad, code, cw, use_kernel=False)
+    # validate_plan rejects the same plan up front — the executor
+    # invariant is exactly "validate_plan-clean"
+    from repro.core.plan import validate_plan
+
+    with pytest.raises(ValueError):
+        validate_plan(bad)
+
+
+def test_source_refilled_across_rounds_is_fine(rng):
+    """A node may send again in a later round once a new fragment arrived
+    — consumption is per buffer, not per node."""
+    from repro.core.plan import Job, RepairPlan, Round, Transfer, validate_plan
+
+    code = RSCode(4, 2)
+    cw = code.encode(rng.integers(0, 256, size=(2, 64), dtype=np.uint8))
+    jobs = [Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2))]
+    plan = RepairPlan(jobs=jobs, rounds=[
+        Round(transfers=[Transfer(src=2, dst=1, job=0,
+                                  terms=frozenset({2}))]),
+        Round(transfers=[Transfer(src=1, dst=0, job=0,
+                                  terms=frozenset({1, 2}))]),
+    ])
+    validate_plan(plan)
+    ex = executor.execute_plan(plan, code, cw, use_kernel=False)
+    assert ex.verified
+    assert ex.bytes_moved == 2 * 64
+
+
+def test_bytes_moved_relay_accounting(rng):
+    """Relays re-send whole chunks: a path of length L moves (L-1)*nbytes.
+    Pinned exactly on a hand-built relayed plan (regression for the
+    previously untested accounting)."""
+    from repro.core.plan import Job, RepairPlan, Round, Transfer, validate_plan
+
+    code = RSCode(4, 2)
+    nbytes = 128
+    cw = code.encode(rng.integers(0, 256, size=(2, nbytes), dtype=np.uint8))
+    jobs = [Job(job_id=0, failed_node=0, requestor=0, helpers=(1, 2))]
+    plan = RepairPlan(jobs=jobs, rounds=[
+        Round(transfers=[
+            Transfer(src=1, dst=0, job=0, terms=frozenset({1})),
+            # 2 -> 0 relayed through idle nodes 4 and 5: 3 hops
+            Transfer(src=2, dst=0, job=0, terms=frozenset({2}),
+                     path=(2, 4, 5, 0)),
+        ]),
+    ])
+    validate_plan(plan, max_recv_per_round=2)
+    ex = executor.execute_plan(plan, code, cw, use_kernel=False)
+    assert ex.verified
+    assert ex.bytes_moved == nbytes * (1 + 3)
+    from repro.core.engine.dataplane import execute_plans_batch
+
+    bat = execute_plans_batch([plan], [code], [cw], use_kernel=False)
+    assert int(bat.bytes_moved[0]) == ex.bytes_moved
+
+
+def test_execute_plan_block_of_placement(rng):
+    """`block_of` decouples node ids from codeword positions: executing
+    under a shifted placement reconstructs the placed block."""
+    from repro.core.plan import Job, RepairPlan, Round, Transfer
+
+    code = RSCode(4, 2)
+    cw = code.encode(rng.integers(0, 256, size=(2, 96), dtype=np.uint8))
+    # node 10 holds block 0 (failed), nodes 11/12 blocks 1/2
+    jobs = [Job(job_id=0, failed_node=10, requestor=10, helpers=(11, 12))]
+    plan = RepairPlan(jobs=jobs, rounds=[
+        Round(transfers=[Transfer(src=11, dst=12, job=0,
+                                  terms=frozenset({11}))]),
+        Round(transfers=[Transfer(src=12, dst=10, job=0,
+                                  terms=frozenset({11, 12}))]),
+    ])
+    block_of = np.full(13, -1, dtype=np.int64)
+    block_of[[10, 11, 12]] = [0, 1, 2]
+    ex = executor.execute_plan(plan, code, cw, use_kernel=False,
+                               block_of=block_of)
+    assert ex.verified
+    assert np.array_equal(ex.reconstructed[0], cw[0])
+
+
 def test_relays_move_extra_bytes(rng):
     """A relayed plan moves more bytes than rounds*chunk (store&forward)."""
     code = RSCode(6, 3)

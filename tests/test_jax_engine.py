@@ -205,3 +205,48 @@ def test_bucketing_shares_compiled_programs():
     n_hops = np.zeros((3, 2), dtype=np.int64)
     hu, hv, nh, tt = e3._pad_round(hop_u, hop_u, n_hops, np.zeros(3))
     assert hu.shape == (4, 2, 1) and tt.shape == (4,)
+
+
+# ------------------------------------------------------ program-cache reuse
+@pytest.mark.skipif(not _HAS_JAX, reason="jax not installed")
+def test_compiled_programs_reused_across_run_sweep_calls():
+    """The jit steppers live in a module-global cache keyed by padded
+    pow2 shapes: a second `run_sweep(executor="jax")` over a fresh but
+    same-shaped suite must trigger ZERO new XLA compilations (this is
+    what makes the jax executor amortizable at all — and what "auto"
+    relies on when routing repeated trace sweeps to it)."""
+    import logging
+
+    import jax
+
+    space = SampleSpace(codes=((6, 3),), cluster_sizes=(8,), chunk_mb=(8.0,),
+                        regimes=("hot2s",), failure_patterns=("single",))
+
+    def make():
+        return TraceSuite.freeze(
+            MonteCarloSuite("reuse", 5, space, base_seed=21), num_epochs=32)
+
+    run_sweep(make(), executor="jax")          # warm every program shape
+
+    compiles: list[str] = []
+
+    class Spy(logging.Handler):
+        def emit(self, record):
+            msg = record.getMessage()
+            if "Finished XLA compilation" in msg:
+                compiles.append(msg)
+
+    spy = Spy(level=logging.WARNING)
+    logger = logging.getLogger("jax")
+    old_level = logger.level
+    jax.config.update("jax_log_compiles", True)
+    logger.addHandler(spy)
+    logger.setLevel(logging.WARNING)
+    try:
+        second = run_sweep(make(), executor="jax")
+    finally:
+        logger.removeHandler(spy)
+        logger.setLevel(old_level)
+        jax.config.update("jax_log_compiles", False)
+    assert len(second.cases) == 5
+    assert not compiles, f"recompiled across run_sweep calls: {compiles}"

@@ -247,3 +247,81 @@ def test_sweep_result_stats_and_cdf():
     red = sweep.reduction_pct("ppr", "bmf")
     assert np.isfinite(red)
     assert sweep.summary_table()
+
+
+# ------------------------------------------------------- auto resolution
+def test_auto_resolves_to_vectorized_on_cpu():
+    """"auto" = the batched array engine; on a CPU jax backend (or no
+    jax) the tuned numpy engine always wins, live or trace, any size."""
+    from repro.sim.sweep import _resolve_executor
+
+    live = list(_small_mc_suite().cases())
+    assert _resolve_executor("auto", live) == "vectorized"
+    frozen = list(TraceSuite.freeze(_small_mc_suite()).cases())
+    assert _resolve_executor("auto", frozen) == "vectorized"
+    # explicit choices pass through untouched
+    assert _resolve_executor("serial", live) == "serial"
+    assert _resolve_executor("jax", live) == "jax"
+
+
+def test_auto_picks_jax_on_accelerator_for_large_trace_suites(monkeypatch):
+    """With a device backend, auto routes large trace-frozen suites to
+    the jax executor — and only those: live epochs or small suites stay
+    on the numpy engine (jit compile + dispatch dominate there, the
+    BENCH_sweep table2_60 regression)."""
+    jax = pytest.importorskip("jax")
+    from repro.sim import sweep as sweep_mod
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    big = list(TraceSuite.freeze(
+        _small_mc_suite(num=sweep_mod._JAX_AUTO_MIN_CASES)).cases())
+    assert sweep_mod._resolve_executor("auto", big) == "jax"
+    small = big[: sweep_mod._JAX_AUTO_MIN_CASES - 1]
+    assert sweep_mod._resolve_executor("auto", small) == "vectorized"
+    live = list(_small_mc_suite(num=sweep_mod._JAX_AUTO_MIN_CASES).cases())
+    assert sweep_mod._resolve_executor("auto", live) == "vectorized"
+
+
+def test_auto_sweep_matches_serial():
+    suite = _small_mc_suite(num=4)
+    ref = run_sweep(suite, executor="serial")
+    got = run_sweep(_small_mc_suite(num=4), executor="auto")
+    for ca, cb in zip(ref.cases, got.cases):
+        for s in ca.results:
+            assert abs(ca.results[s].total_time
+                       - cb.results[s].total_time) <= 1e-9
+
+
+# ------------------------------------------------------- byte verification
+def test_verify_bytes_samples_and_passes():
+    """`verify_bytes=k` byte-verifies k sampled cases against placed
+    stripes — every scheme of every sampled case, batched."""
+    suite = _small_mc_suite(num=6)
+    sweep = run_sweep(suite, executor="vectorized", verify_bytes=3)
+    bv = sweep.byte_verification
+    assert bv is not None and bv.verified and not bv.failures
+    checked_cases = {i for i, _ in bv.checked}
+    assert len(checked_cases) == 3
+    # every scheme of each sampled case was executed over bytes
+    by_case = {c.index: set(c.results) for c in sweep.cases}
+    for i in checked_cases:
+        assert {s for j, s in bv.checked if j == i} == by_case[i]
+    assert bv.nbytes > 0
+
+
+def test_verify_bytes_covers_ppt_and_multi():
+    """Single-failure suites include ppt (via the pipeline-tree
+    lowering); the sample covers it."""
+    space = SampleSpace(codes=((6, 3),), cluster_sizes=(9,),
+                        chunk_mb=(8.0,), regimes=("hot2s",),
+                        failure_patterns=("single",))
+    suite = MonteCarloSuite("bv1", 3, space, base_seed=11)
+    sweep = run_sweep(suite, executor="serial", verify_bytes=3)
+    bv = sweep.byte_verification
+    assert bv.verified
+    assert any(s == "ppt" for _, s in bv.checked)
+
+
+def test_verify_bytes_off_by_default():
+    sweep = run_sweep(_small_mc_suite(num=2), executor="serial")
+    assert sweep.byte_verification is None
